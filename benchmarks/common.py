@@ -1,0 +1,84 @@
+"""Shared benchmark plumbing.
+
+Every benchmark module exposes ``run(quick: bool) -> list[dict]`` where each
+dict has at least {"name", "us_per_call", "derived"}; ``benchmarks/run.py``
+prints them as CSV (one row per measured quantity) and writes the full JSON
+to experiments/bench/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS_DIR", "experiments/bench")
+
+# load-matched subsampling (see HMAIPlatform.capacity_scale)
+RATE_SCALE = 0.05
+
+
+def timer(fn, *args, warmup: int = 1, iters: int = 3, **kwargs):
+    """Returns (last_result, seconds_per_call)."""
+    for _ in range(warmup):
+        result = fn(*args, **kwargs)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args, **kwargs)
+    return result, (time.perf_counter() - t0) / iters
+
+
+def row(name: str, us_per_call: float, derived, **extra) -> dict:
+    r = {"name": name, "us_per_call": round(float(us_per_call), 3),
+         "derived": derived}
+    r.update(extra)
+    return r
+
+
+def save(module: str, rows: list) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{module}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def queues_for(area: str, n: int, km: float, seed0: int = 0):
+    from repro.core.environment import Area, EnvironmentParams, build_task_queue
+    return [build_task_queue(EnvironmentParams(
+        area=Area(area), route_km=km, rate_scale=RATE_SCALE, seed=seed0 + s))
+        for s in range(n)]
+
+
+def platform():
+    from repro.core.hmai import HMAIPlatform
+    return HMAIPlatform(capacity_scale=RATE_SCALE)
+
+
+_AGENT_CACHE = {}
+
+
+def trained_flexai(area: str = "UB", episodes: int = 25, quick: bool = True):
+    """Train (or load) a FlexAI agent for an area; cached per process.
+
+    If a pre-trained checkpoint exists (the long offline run in
+    experiments/flexai/), load it — the paper's "well-trained agent".
+    Quick mode otherwise trains a small number of episodes.
+    """
+    key = (area, quick)
+    if key in _AGENT_CACHE:
+        return _AGENT_CACHE[key]
+    from repro.core.flexai import FlexAIAgent, FlexAIConfig
+    plat = platform()
+    agent = FlexAIAgent(plat, FlexAIConfig(
+        lr=1e-3, gamma=0.98, min_replay=256, update_every=2,
+        eps_decay_steps=40000, target_sync_every=500))
+    ckpt = os.path.join("experiments", "flexai", "agent_ub.npz")
+    if os.path.exists(ckpt):
+        agent.load_weights(ckpt)
+    else:
+        queues = queues_for(area, 4, km=0.15)
+        val_q = queues_for(area, 1, km=0.15, seed0=50)[0]
+        agent.train(plat, queues, episodes=episodes if not quick else 12,
+                    eval_queue=val_q, eval_every=4)
+    _AGENT_CACHE[key] = agent
+    return agent

@@ -1,0 +1,28 @@
+"""Figure 11: FlexAI RL-agent training-loss curve (urban area).
+
+Reproduces the qualitative claim: loss stabilizes after the first episodes
+because queue composition is similar across episodes — the trained agent
+transfers."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, save, trained_flexai
+
+
+def run(quick: bool = True) -> list:
+    agent = trained_flexai("UB", quick=quick)
+    losses = np.asarray(agent.losses, dtype=np.float64)
+    rows = []
+    if len(losses) >= 10:
+        k = len(losses) // 5
+        for i in range(5):
+            seg = losses[i * k:(i + 1) * k]
+            rows.append(row(f"fig11/loss_phase{i}", 0.0,
+                            round(float(np.mean(seg)), 4)))
+        early = float(np.mean(losses[: 2 * k]))
+        late = float(np.mean(losses[-k:]))
+        rows.append(row("fig11/loss_stabilizes", 0.0, bool(late <= early * 3),
+                        early=round(early, 4), late=round(late, 4)))
+    save("fig11_training_loss", rows)
+    return rows

@@ -1,0 +1,56 @@
+"""Figure 12: FlexAI vs baselines — time, R_Balance, MS, energy across
+areas (UB/UHW/HW) and task queues."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import platform, queues_for, row, save, trained_flexai
+
+BASELINES = ("minmin", "ata", "ga", "sa", "worst")
+
+
+def run(quick: bool = True) -> list:
+    from repro.core.schedulers import get_scheduler
+    areas = ["UB"] if quick else ["UB", "UHW", "HW"]
+    n_queues = 2 if quick else 5
+    rows = []
+    for area in areas:
+        agent = trained_flexai(area, quick=quick)
+        queues = queues_for(area, n_queues, km=0.1, seed0=50)
+        results = {}
+        for name in BASELINES:
+            per_q = []
+            for q in queues:
+                p = platform()
+                per_q.append(get_scheduler(name).schedule(p, q))
+            results[name] = per_q
+        per_q = []
+        for q in queues:
+            p = platform()
+            per_q.append(agent.schedule(p, q))
+        results["flexai"] = per_q
+
+        for name, rs in results.items():
+            gm = lambda k: float(np.exp(np.mean(np.log(np.maximum(
+                [r[k] for r in rs], 1e-12)))))
+            total_time = gm("makespan_s")
+            rows.append(row(f"fig12a/{area}/{name}/time_s",
+                            np.mean([r["schedule_time_per_task_s"]
+                                     for r in rs]) * 1e6,
+                            round(total_time, 2)))
+            rows.append(row(f"fig12b/{area}/{name}/r_balance", 0.0,
+                            round(float(np.mean([r["r_balance"]
+                                                 for r in rs])), 4)))
+            rows.append(row(f"fig12c/{area}/{name}/total_ms", 0.0,
+                            round(float(np.mean([r["total_ms"]
+                                                 for r in rs])), 1)))
+            rows.append(row(f"fig12d/{area}/{name}/energy_j", 0.0,
+                            round(gm("total_energy_j"), 1)))
+        # headline orderings
+        rb = {n: np.mean([r["r_balance"] for r in rs])
+              for n, rs in results.items()}
+        rows.append(row(f"fig12/{area}/flexai_best_rbalance", 0.0,
+                        bool(max(rb, key=rb.get) == "flexai"), values={
+                            k: round(v, 3) for k, v in rb.items()}))
+    save("fig12_scheduler_comparison", rows)
+    return rows

@@ -1,0 +1,33 @@
+"""Figure 13: safety-time meet rate (STMRate) per task queue per scheduler."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import platform, queues_for, row, save, trained_flexai
+
+
+def run(quick: bool = True) -> list:
+    from repro.core.schedulers import get_scheduler
+    n_queues = 2 if quick else 5
+    queues = queues_for("UB", n_queues, km=0.1, seed0=70)
+    agent = trained_flexai("UB", quick=quick)
+    rows = []
+    stm = {}
+    for name in ("minmin", "ata", "ga", "sa", "worst"):
+        vals = []
+        for q in queues:
+            p = platform()
+            vals.append(get_scheduler(name).schedule(p, q)["stm_rate"])
+        stm[name] = float(np.mean(vals))
+    vals = []
+    for q in queues:
+        p = platform()
+        vals.append(agent.schedule(p, q)["stm_rate"])
+    stm["flexai"] = float(np.mean(vals))
+    for name, v in stm.items():
+        rows.append(row(f"fig13/{name}/stm_rate", 0.0, round(v, 4)))
+    order = sorted(stm, key=stm.get, reverse=True)
+    rows.append(row("fig13/ranking", 0.0, ">".join(order),
+                    paper="flexai ~100%, ata high, others lower"))
+    save("fig13_stmrate", rows)
+    return rows

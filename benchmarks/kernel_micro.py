@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: Pallas kernels vs jnp oracles.
+
+On this CPU container interpret-mode timings measure the Python interpreter,
+not the TPU — so the *correctness deltas* and the XLA-compiled oracle
+timings are what we report; absolute kernel perf comes from the roofline
+analysis of the lowered HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, save, timer
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # conv oracle (XLA-compiled) + kernel correctness deltas
+    from repro.kernels.conv_dataflow import conv2d, conv2d_ref
+    x = jax.random.normal(key, (2, 16, 16, 8))
+    w = jax.random.normal(key, (3, 3, 8, 16)) * 0.2
+    ref_jit = jax.jit(conv2d_ref)
+    ref, dt = timer(lambda: jax.block_until_ready(ref_jit(x, w)), iters=5)
+    rows.append(row("kernel/conv_ref_xla", dt * 1e6, "oracle"))
+    for df in ("SconvOD", "SconvIC", "MconvMC"):
+        out = conv2d(x, w, dataflow=df, interpret=True)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rows.append(row(f"kernel/conv_{df}_maxerr", 0.0, f"{err:.2e}"))
+
+    # flash attention
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    import math
+    b, s, h, d = 2, 128, 4, 32
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(key, (b, s, h, d))
+    v = jax.random.normal(key, (b, s, h, d))
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    ref_fn = jax.jit(lambda a, b_, c: attention_ref(
+        a, b_, c, causal=True, scale=1 / math.sqrt(d)))
+    ref, dt = timer(lambda: jax.block_until_ready(ref_fn(qf, kf, vf)),
+                    iters=5)
+    rows.append(row("kernel/attention_ref_xla", dt * 1e6, "oracle"))
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref4 = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    rows.append(row("kernel/flash_attention_maxerr", 0.0,
+                    f"{float(jnp.max(jnp.abs(out - ref4))):.2e}"))
+
+    # ssd scan
+    from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+    b, s, h, p, n = 2, 64, 2, 16, 8
+    u = jax.random.normal(key, (b, s, h, p)) * 0.3
+    a = -jnp.abs(jax.random.normal(key, (b, s, h))) * 0.2
+    Bm = jax.random.normal(key, (b, s, n)) * 0.5
+    Cm = jax.random.normal(key, (b, s, n)) * 0.5
+    uf = u.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    af = a.transpose(0, 2, 1).reshape(b * h, s)
+    Bf = jnp.repeat(Bm[:, None], h, 1).reshape(b * h, s, n)
+    Cf = jnp.repeat(Cm[:, None], h, 1).reshape(b * h, s, n)
+    ref_fn = jax.jit(ssd_ref)
+    (yr, hr), dt = timer(lambda: jax.block_until_ready(
+        ref_fn(uf, af, Bf, Cf)), iters=5)
+    rows.append(row("kernel/ssd_ref_xla", dt * 1e6, "oracle"))
+    y, sfin = ssd_scan(u, a, Bm, Cm, chunk=16, interpret=True)
+    yr4 = yr.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    rows.append(row("kernel/ssd_scan_maxerr", 0.0,
+                    f"{float(jnp.max(jnp.abs(y - yr4))):.2e}"))
+    save("kernel_micro", rows)
+    return rows

@@ -1,0 +1,29 @@
+"""Table 1: features of the perception CNNs (MACs, weights+neurons, layers)
+— derived from the model definitions vs the paper's published values."""
+from __future__ import annotations
+
+from benchmarks.common import row, save, timer
+
+PAPER = {
+    "yolo": {"macs": 16e9, "weights_and_neurons": 150e6, "layers": 101},
+    "ssd": {"macs": 26e9, "weights_and_neurons": 697.76e6, "layers": 53},
+    "goturn": {"macs": 11e9, "weights_and_neurons": 13.95e6, "layers": 11},
+}
+
+
+def run(quick: bool = True) -> list:
+    from repro.models.perception.nets import perception_stats
+    stats, dt = timer(perception_stats, iters=1)
+    rows = []
+    for name, st in stats.items():
+        p = PAPER[name]
+        rows.append(row(
+            f"table1/{name}/gmacs", dt * 1e6,
+            round(st["macs"] / 1e9, 2),
+            paper=p["macs"] / 1e9,
+            ratio=round(st["macs"] / p["macs"], 2)))
+        rows.append(row(
+            f"table1/{name}/layers", dt * 1e6, st["layers"],
+            paper=p["layers"]))
+    save("table1_cnn_features", rows)
+    return rows

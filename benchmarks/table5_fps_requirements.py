@@ -1,0 +1,33 @@
+"""Table 5: urban-area FPS requirements per scenario (DET/TRA and the
+YOLO/SSD/GOTURN split) derived from the camera model."""
+from __future__ import annotations
+
+from benchmarks.common import row, save
+
+PAPER = {  # scenario -> (DET, TRA, YOLO, SSD, GOTURN)
+    "GS": (870, 840, 435, 435, 840),
+    "TL": (950, 920, 475, 475, 920),
+    "RE": (740, 740, 370, 370, 740),
+}
+
+
+def run(quick: bool = True) -> list:
+    from repro.core.environment import Area, CAMERA_GROUPS, Scenario, camera_hz
+    rows = []
+    for sc_name, paper in PAPER.items():
+        sc = Scenario(sc_name)
+        det = sum(g.count * camera_hz(Area.UB, sc, g.name)
+                  for g in CAMERA_GROUPS)
+        tra = sum(g.count * camera_hz(Area.UB, sc, g.name)
+                  for g in CAMERA_GROUPS
+                  if g.name != "RC" or sc == Scenario.RE)
+        rows.append(row(f"table5/{sc_name}/det_fps", 0.0, det,
+                        paper=paper[0], match=abs(det - paper[0]) < 1e-6))
+        rows.append(row(f"table5/{sc_name}/tra_fps", 0.0, tra,
+                        paper=paper[1], match=abs(tra - paper[1]) < 1e-6))
+        rows.append(row(f"table5/{sc_name}/yolo_fps", 0.0, det / 2,
+                        paper=paper[2]))
+        rows.append(row(f"table5/{sc_name}/goturn_fps", 0.0, tra,
+                        paper=paper[4]))
+    save("table5_fps_requirements", rows)
+    return rows

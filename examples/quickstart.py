@@ -1,0 +1,55 @@
+"""Quickstart: the public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. builds a tiny decoder LM, trains it a few steps on the synthetic stream,
+2. serves greedy completions,
+3. schedules a driving-automation task queue with FlexAI on simulated HMAI.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import model_api
+from repro.models.config import ModelConfig
+from repro.serve.engine import Request, ServeEngine
+from repro.sharding import unbox
+from repro.train.data import DataConfig, batch_fn
+from repro.train.loop import TrainHyper, init_train_state, make_train_step
+
+# ---- 1. train a tiny LM ---------------------------------------------------
+cfg = ModelConfig(name="quickstart", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                  attention_impl="naive")
+api = model_api(cfg)
+hyper = TrainHyper(peak_lr=3e-3, warmup_steps=5, total_steps=60)
+state = init_train_state(unbox(api.init(jax.random.PRNGKey(0))), hyper)
+step = jax.jit(make_train_step(api, hyper))
+bat = batch_fn(cfg, DataConfig(batch_size=4, seq_len=32))
+for i in range(60):
+    state, metrics = step(state, bat(i))
+    if i % 20 == 0:
+        print(f"train step {i}: loss={float(metrics['loss']):.3f}")
+
+# ---- 2. serve it ----------------------------------------------------------
+eng = ServeEngine(api, state.params, slots=2, max_seq=48)
+eng.submit(Request(uid=0, prompt=np.array([5, 12, 19], np.int32),
+                   max_new_tokens=8))
+eng.run_until_done()
+print("generated:", eng.finished[0].generated)
+
+# ---- 3. FlexAI on the simulated HMAI --------------------------------------
+from repro.core.environment import EnvironmentParams, build_task_queue
+from repro.core.flexai import FlexAIAgent, FlexAIConfig
+from repro.core.hmai import HMAIPlatform
+
+RS = 0.05
+queue = build_task_queue(EnvironmentParams(route_km=0.05, rate_scale=RS))
+plat = HMAIPlatform(capacity_scale=RS)
+agent = FlexAIAgent(plat, FlexAIConfig(min_replay=64, eps_decay_steps=4000))
+agent.train(plat, [queue], episodes=3)
+plat.reset()
+summary = agent.schedule(plat, queue)
+print(f"FlexAI on {summary['tasks']} tasks: "
+      f"STM rate={summary['stm_rate']:.2f}, "
+      f"R_Balance={summary['r_balance']:.2f}")

@@ -1,0 +1,80 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from
+experiments/dryrun/results.jsonl (+ perf JSONs).
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import (load_records, markdown_table,  # noqa: E402
+                                 roofline_terms)
+
+DOC = "EXPERIMENTS.md"
+BEGIN = "<!-- GENERATED:{tag} -->"
+END = "<!-- /GENERATED:{tag} -->"
+
+
+def inject(text: str, tag: str, content: str) -> str:
+    b = BEGIN.format(tag=tag)
+    e = END.format(tag=tag)
+    pattern = re.compile(re.escape(b) + ".*?" + re.escape(e), re.DOTALL)
+    return pattern.sub(b + "\n" + content + "\n" + e, text)
+
+
+def dryrun_table(records: list) -> str:
+    lines = ["| arch | shape | mesh | status | peak GiB/dev | args GiB/dev | "
+             "HLO flops/dev | coll GiB/dev | collective mix | compile s |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skipped ({r['reason'][:48]}) | — | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAILED | — | — | — | — | — | — |")
+            continue
+        probe = r.get("probe") or {}
+        flops = probe.get("flops_per_device", r.get("flops_per_device", 0))
+        coll = max(0.0, probe.get("collective_operand_bytes",
+                   r["collectives"]["total_operand_bytes"]))
+        mix = r["collectives"]
+        mixstr = " ".join(
+            f"{k.split('-')[-1]}:{v['count']}"
+            for k, v in mix.items()
+            if isinstance(v, dict) and v["count"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['peak_bytes_per_device']/2**30:.2f} "
+            f"| {r['argument_bytes_per_device']/2**30:.2f} "
+            f"| {flops:.3g} | {coll/2**30:.2f} | {mixstr} "
+            f"| {r['compile_s']} |")
+    n_ok = sum(1 for r in records if r.get("status") == "ok")
+    n_skip = sum(1 for r in records if r.get("status") == "skipped")
+    n_fail = sum(1 for r in records if r.get("status") == "failed")
+    lines.append("")
+    lines.append(f"**{n_ok} ok / {n_skip} skipped (documented) / "
+                 f"{n_fail} failed** out of {len(records)} cells.")
+    return "\n".join(lines)
+
+
+def main():
+    records = [r for r in load_records()
+               if r.get("rules", "default") == "default"]
+    text = open(DOC).read()
+    text = inject(text, "dryrun", dryrun_table(records))
+    text = inject(text, "roofline", markdown_table(
+        [r for r in records if r.get("mesh") == "pod16x16"]))
+    open(DOC, "w").write(text)
+    print(f"rendered {len(records)} records into {DOC}")
+
+
+if __name__ == "__main__":
+    main()

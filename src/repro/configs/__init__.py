@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` ids map to ModelConfigs."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "h2o-danube-3-4b",
+    "mistral-large-123b",
+    "minicpm3-4b",
+    "stablelm-1.6b",
+    "jamba-v0.1-52b",
+    "mamba2-130m",
+    "internvl2-76b",
+    "moonshot-v1-16b-a3b",
+    "qwen3-moe-30b-a3b",
+    "seamless-m4t-medium",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return importlib.import_module(_MODULES[arch_id]).SMOKE_CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}

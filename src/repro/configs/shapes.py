@@ -1,0 +1,100 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four cells per architecture (40 total):
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+    decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524,288 global_batch 1     -> serve_step
+
+``long_500k`` requires sub-quadratic attention / bounded cache: it runs for
+SSM (mamba2), hybrid (jamba), and SWA (h2o-danube) archs, and is marked
+skipped for pure full-attention archs (see DESIGN.md §shape-cell skips).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    """True when the arch has sub-quadratic attention / bounded decode state."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    return cfg.sliding_window is not None
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not long_context_capable(cfg):
+        return False, "pure full-attention arch: unbounded 500k decode cache"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Boxed ShapeDtypeStruct stand-ins for a training batch (weak-type
+    correct, shardable, no allocation)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.is_encoder_decoder:
+        src = s // cfg.encoder_seq_ratio
+        return {
+            "tokens": Param(_sds((b, s), jnp.int32), ("batch", None)),
+            "labels": Param(_sds((b, s), jnp.int32), ("batch", None)),
+            "loss_mask": Param(_sds((b, s), jnp.float32), ("batch", None)),
+            "frontend_embeds": Param(_sds((b, src, cfg.d_model), jnp.float32),
+                                     ("batch", "seq", None)),
+        }
+    if cfg.frontend is not None:
+        t = cfg.num_frontend_tokens
+        s_text = s - t
+        return {
+            "tokens": Param(_sds((b, s_text), jnp.int32), ("batch", None)),
+            "labels": Param(_sds((b, s_text), jnp.int32), ("batch", None)),
+            "loss_mask": Param(_sds((b, s_text), jnp.float32), ("batch", None)),
+            "frontend_embeds": Param(_sds((b, t, cfg.d_model), jnp.float32),
+                                     ("batch", None, None)),
+        }
+    return {
+        "tokens": Param(_sds((b, s), jnp.int32), ("batch", None)),
+        "labels": Param(_sds((b, s), jnp.int32), ("batch", None)),
+        "loss_mask": Param(_sds((b, s), jnp.float32), ("batch", None)),
+    }
+
+
+def decode_token_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    return {
+        "token": Param(_sds((cell.global_batch, 1), jnp.int32),
+                       ("batch", None)),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """All model inputs for a cell as boxed ShapeDtypeStructs."""
+    cell = SHAPES[shape_name]
+    if cell.step in ("train", "prefill"):
+        return train_batch_specs(cfg, cell)
+    return decode_token_specs(cfg, cell)

@@ -1,0 +1,15 @@
+"""The paper's contribution: HMAI heterogeneous accelerator platform,
+system design criteria (Matching Score / Gvalue), the dynamic driving
+environment, and the FlexAI RL scheduler."""
+
+from repro.core.taxonomy import (AcceleratorArch, DataProcessing,
+                                 Propagation, RegisterAlloc, TAXONOMY)
+from repro.core.criteria import (rss_safe_distance, rss_safety_time,
+                                 matching_score_det, matching_score_tra,
+                                 gvalue)
+from repro.core.tasks import Task, TaskKind, task_features
+from repro.core.hmai import (AcceleratorSpec, HMAIPlatform, HMAI_CONFIG,
+                             ACCELERATOR_SPECS, accelerator_fps)
+from repro.core.environment import (DrivingEnvironment, EnvironmentParams,
+                                    Area, Scenario, CameraGroup,
+                                    CAMERA_GROUPS, build_task_queue)

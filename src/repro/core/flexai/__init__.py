@@ -1,0 +1,4 @@
+from repro.core.flexai.dqn import DQNParams, init_qnet, qnet_apply, DQNLearner
+from repro.core.flexai.replay import ReplayBuffer
+from repro.core.flexai.agent import FlexAIAgent, FlexAIConfig
+from repro.core.flexai.reward import compute_reward

@@ -1,0 +1,164 @@
+"""FlexAI: the RL task-scheduling engine (paper §7).
+
+The agent's input state is Task-Info (Amount, LayerNum, safety_time) +
+HW-Info (E_i, T_i, R_Balance_i, MS_i for every accelerator); its action is
+the accelerator index; the reward is dGvalue + dMS (``reward.py``).
+
+Training follows Fig 8: schedule -> execute on HMAI -> record
+(S_i, H_j, r_i, S_{i+1}) -> replay-sample -> TD update; TargNet syncs on a
+fixed cadence.  Inference is a single EvalNet forward per task (predictive:
+no lookahead over later tasks; global: HW-Info carries platform state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.flexai.dqn import DQNLearner
+from repro.core.flexai.replay import ReplayBuffer
+from repro.core.flexai.reward import compute_reward, snapshot
+from repro.core.hmai import HMAIPlatform
+from repro.core.tasks import Task, task_features
+
+
+@dataclasses.dataclass(frozen=True)
+class FlexAIConfig:
+    gamma: float = 0.95
+    lr: float = 1e-3           # paper §8.3 uses 0.01; 1e-3 is stable with Adam (see DESIGN.md)
+    batch_size: int = 64
+    replay_capacity: int = 50_000
+    min_replay: int = 256
+    target_sync_every: int = 200
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 20_000
+    update_every: int = 1
+    backlog_scale: float = 1.0  # seconds; HW-Info backlog -> log1p(b/scale)
+    seed: int = 0
+
+
+class FlexAIAgent:
+    def __init__(self, platform: HMAIPlatform, cfg: FlexAIConfig = FlexAIConfig()):
+        self.cfg = cfg
+        self.n_actions = platform.n
+        # Task-Info (3) + per-accelerator HW-Info (E, T, R_Balance, MS) +
+        # the accelerator's service time for the current task class (the
+        # platform knows its own Table-8 rates; exposing them in HW-Info
+        # substitutes for the paper's 30M-step training budget — DESIGN.md)
+        self.state_dim = 3 + 5 * platform.n
+        self.learner = DQNLearner(
+            jax.random.PRNGKey(cfg.seed), self.state_dim, self.n_actions,
+            gamma=cfg.gamma, lr=cfg.lr,
+            target_sync_every=cfg.target_sync_every)
+        self.replay = ReplayBuffer(cfg.replay_capacity, self.state_dim,
+                                   seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.env_steps = 0
+        self.losses: list[float] = []
+
+    # ------------------------------------------------------------------
+    def state_vector(self, task: Task, platform: HMAIPlatform) -> np.ndarray:
+        tf = np.asarray(task_features(task), np.float32)
+        hw = platform.hw_info(now=task.arrival_time).astype(np.float32)
+        hw[:, 1] = np.log1p(hw[:, 1] / self.cfg.backlog_scale)
+        exec_row = np.asarray(
+            [platform.exec_time(task, i) for i in range(platform.n)],
+            np.float32)[:, None]
+        hw = np.concatenate([hw, exec_row], axis=1)
+        return np.concatenate([tf, hw.reshape(-1)])
+
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(1.0, self.env_steps / max(c.eps_decay_steps, 1))
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    def act(self, state: np.ndarray, explore: bool) -> int:
+        if explore and self.rng.random() < self.epsilon():
+            return int(self.rng.integers(0, self.n_actions))
+        q = np.asarray(self.learner.q_values(state[None]))[0]
+        return int(np.argmax(q))
+
+    # ------------------------------------------------------------------
+    def train_episode(self, platform: HMAIPlatform, tasks: list) -> dict:
+        """One episode = one task queue (paper §8.3)."""
+        platform.reset()
+        c = self.cfg
+        ep_losses = []
+        state = None
+        for i, task in enumerate(tasks):
+            state = self.state_vector(task, platform)
+            action = self.act(state, explore=True)
+            before = snapshot(platform)
+            platform.execute(task, action)
+            reward = compute_reward(before, platform)
+            nxt_task = tasks[i + 1] if i + 1 < len(tasks) else task
+            next_state = self.state_vector(nxt_task, platform)
+            self.replay.add(state, action, reward, next_state,
+                            done=(i + 1 == len(tasks)))
+            self.env_steps += 1
+            if (self.replay.size >= c.min_replay
+                    and self.env_steps % c.update_every == 0):
+                loss = self.learner.update(self.replay.sample(c.batch_size))
+                ep_losses.append(loss)
+                self.losses.append(loss)
+        summ = platform.summary()
+        summ["mean_loss"] = float(np.mean(ep_losses)) if ep_losses else None
+        return summ
+
+    def train(self, platform: HMAIPlatform, queues: list, episodes: int,
+              eval_queue: list | None = None, eval_every: int = 5) -> list:
+        """Cycle through task queues for the given number of episodes.
+
+        With ``eval_queue``, periodically evaluates the greedy policy and
+        keeps the best EvalNet weights (model selection on a validation
+        queue — the counterpart of the paper's train-to-convergence budget).
+        """
+        history = []
+        best_stm = -1.0
+        best_params = None
+        for ep in range(episodes):
+            tasks = queues[ep % len(queues)]
+            history.append(self.train_episode(platform, tasks))
+            if eval_queue is not None and (ep + 1) % eval_every == 0:
+                p_eval = HMAIPlatform(
+                    specs=list(platform.specs), capacity_scale=1.0)
+                stm = self.schedule(p_eval, eval_queue)["stm_rate"]
+                history[-1]["eval_stm"] = stm
+                if stm > best_stm:
+                    best_stm = stm
+                    best_params = self.learner.eval_p
+        if best_params is not None:
+            self.learner.eval_p = best_params
+            self.learner.targ_p = best_params
+        return history
+
+    # ------------------------------------------------------------------
+    def save_weights(self, path: str) -> None:
+        np.savez(path, **{f"p{i}": np.asarray(w)
+                          for i, w in enumerate(self.learner.eval_p)})
+
+    def load_weights(self, path: str) -> None:
+        from repro.core.flexai.dqn import DQNParams
+        import jax.numpy as jnp
+        data = np.load(path)
+        params = DQNParams(*[jnp.asarray(data[f"p{i}"])
+                             for i in range(len(data.files))])
+        self.learner.eval_p = params
+        self.learner.targ_p = params
+
+    # ------------------------------------------------------------------
+    def schedule(self, platform: HMAIPlatform, tasks: list) -> dict:
+        """Inference (well-trained agent): greedy Q per task (§7.1)."""
+        t0 = time.perf_counter()
+        for task in tasks:
+            state = self.state_vector(task, platform)
+            action = self.act(state, explore=False)
+            platform.execute(task, action)
+        sched_time = time.perf_counter() - t0
+        summ = platform.summary()
+        summ["schedule_time_s"] = sched_time
+        summ["schedule_time_per_task_s"] = sched_time / max(len(tasks), 1)
+        return summ

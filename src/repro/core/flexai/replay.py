@@ -1,0 +1,34 @@
+"""Experience replay memory (paper §7.1 step (2))."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, seed: int = 0):
+        self.capacity = capacity
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity,), np.int32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s_next = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.size = 0
+        self.ptr = 0
+        self.rng = np.random.default_rng(seed)
+
+    def add(self, s, a, r, s_next, done) -> None:
+        i = self.ptr
+        self.s[i] = s
+        self.a[i] = a
+        self.r[i] = r
+        self.s_next[i] = s_next
+        self.done[i] = float(done)
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, batch_size: int) -> dict:
+        idx = self.rng.integers(0, self.size, size=batch_size)
+        return {
+            "s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
+            "s_next": self.s_next[idx], "done": self.done[idx],
+        }

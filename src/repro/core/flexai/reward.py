@@ -1,0 +1,22 @@
+"""Reward computation (paper §7.2).
+
+After executing the M-th task:
+
+    reward = Gvalue_new - Gvalue + MS_new - MS
+
+where Gvalue = (-E - T + R_Balance)/3 over the whole platform and MS is the
+summed Matching Score across accelerators.  The platform tracks the running
+normalization scales for E and T.
+"""
+from __future__ import annotations
+
+from repro.core.hmai import HMAIPlatform
+
+
+def snapshot(platform: HMAIPlatform) -> dict:
+    return {"gvalue": platform.gvalue(), "ms": platform.total_ms}
+
+
+def compute_reward(before: dict, platform: HMAIPlatform) -> float:
+    after = snapshot(platform)
+    return (after["gvalue"] - before["gvalue"]) + (after["ms"] - before["ms"])

@@ -1,0 +1,6 @@
+from repro.core.schedulers.base import Scheduler, SCHEDULERS, get_scheduler
+from repro.core.schedulers.minmin import MinMinScheduler
+from repro.core.schedulers.ata import ATAScheduler
+from repro.core.schedulers.ga import GAScheduler
+from repro.core.schedulers.sa import SAScheduler
+from repro.core.schedulers.worst import WorstCaseScheduler, RandomScheduler

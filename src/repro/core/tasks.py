@@ -1,0 +1,49 @@
+"""Task descriptors for the driving-automation workload (paper §7.1).
+
+A Task is one camera frame needing one CNN inference (DET via YOLO or SSD,
+TRA via GOTURN).  Task-Info fed to the RL agent is (Amount, LayerNum,
+safety_time) exactly as §7.1 specifies; Amount/LayerNum derive from the
+perception model definitions (Table 1), not hard-coded constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import lru_cache
+
+
+class TaskKind(enum.Enum):
+    YOLO = "yolo"      # DET, small/medium objects
+    SSD = "ssd"        # DET, large objects
+    GOTURN = "goturn"  # TRA
+
+
+@lru_cache(maxsize=1)
+def _model_stats() -> dict:
+    from repro.models.perception.nets import perception_stats
+    return perception_stats()
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    uid: int
+    kind: TaskKind
+    camera_group: str    # FC / FLSC / RLSC / FRSC / RRSC / RC
+    camera_id: int
+    arrival_time: float  # seconds since route start
+    safety_time: float   # response budget (criteria.camera_safety_time)
+
+    @property
+    def amount(self) -> float:
+        """Computation amount (MACs)."""
+        return float(_model_stats()[self.kind.value]["macs"])
+
+    @property
+    def layer_num(self) -> int:
+        return int(_model_stats()[self.kind.value]["layers"])
+
+
+def task_features(task: Task) -> tuple[float, float, float]:
+    """Task-Info vector for the RL agent: (Amount, LayerNum, safety_time),
+    scaled to O(1) ranges."""
+    return (task.amount / 30e9, task.layer_num / 100.0, task.safety_time)

@@ -1,0 +1,5 @@
+from repro.kernels.conv_dataflow.ops import conv2d, DATAFLOWS
+from repro.kernels.conv_dataflow.ref import conv2d_ref
+from repro.kernels.conv_dataflow.sconv_od import sconv_od
+from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
+from repro.kernels.conv_dataflow.mconv_mc import mconv_mc

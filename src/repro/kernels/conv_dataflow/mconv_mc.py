@@ -1,0 +1,81 @@
+"""MconvMC — Mconv-MP-CR archetype (Origami) as a Pallas TPU kernel.
+
+Taxonomy mapping (DESIGN.md §3):
+  * Mconv: each BasicUnit iteration processes MULTIPLE 2D convolutions —
+    a [Tc (in-channel) x Tm (out-channel)] tile of channel pairs at once,
+    as an im2col matrix multiplication on the MXU (Origami's matrix unit;
+    Table 10's ">1 MAC per PE" + on-chip buffer).
+  * MP (multiple propagation): both ifmap patches and filter tiles stream
+    through the systolic array each step.
+  * CR: psums live in a shared VMEM accumulator across the sequential
+    in-channel grid dimension.
+
+Grid: (N, Cout_tiles, Cin_tiles) with Cin sequential ("arbitrary").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int):
+    ci_step = pl.program_id(2)
+    n_ci = pl.num_programs(2)
+
+    @pl.when(ci_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ho, wo = o_ref.shape[0], o_ref.shape[1]
+    tc = x_ref.shape[-1]
+    tm = o_ref.shape[-1]
+    # im2col GEMM: each tap contributes [Ho*Wo, Tc] @ [Tc, Tm] on the MXU
+    acc = acc_ref[...].reshape(ho * wo, tm)
+    for di in range(kh):
+        for dj in range(kw):
+            patch = x_ref[pl.ds(di, ho), pl.ds(dj, wo), :]   # [Ho, Wo, Tc]
+            mat = patch.reshape(ho * wo, tc)
+            acc += jax.lax.dot(
+                mat.astype(jnp.float32),
+                w_ref[di, dj, :, :].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    acc_ref[...] = acc.reshape(ho, wo, tm)
+
+    @pl.when(ci_step == n_ci - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def mconv_mc(x: jax.Array, w: jax.Array, *, cout_tile: int = 128,
+             cin_tile: int = 32, interpret: bool = False) -> jax.Array:
+    """x [N,H,W,Cin], w [KH,KW,Cin,Cout] -> [N,Ho,Wo,Cout] (stride 1, VALID)."""
+    n, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    cout_tile = min(cout_tile, cout)
+    cin_tile = min(cin_tile, cin)
+    assert cout % cout_tile == 0 and cin % cin_tile == 0
+    grid = (n, cout // cout_tile, cin // cin_tile)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, h, wd, cin_tile),
+                         lambda b, co, ci: (b, 0, 0, ci)),
+            pl.BlockSpec((kh, kw, cin_tile, cout_tile),
+                         lambda b, co, ci: (0, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((None, ho, wo, cout_tile),
+                               lambda b, co, ci: (b, 0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho, wo, cout_tile), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="mconv_mc",
+    )(x, w)

@@ -1,0 +1,64 @@
+"""jit'd wrappers for the three conv-dataflow kernels.
+
+``conv2d(x, w, dataflow=...)`` handles SAME/VALID padding and stride by
+pre-padding / post-slicing around the stride-1 VALID kernels, picks
+hardware-aligned tile sizes, and falls back to interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv_dataflow.mconv_mc import mconv_mc
+from repro.kernels.conv_dataflow.ref import conv2d_ref
+from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
+from repro.kernels.conv_dataflow.sconv_od import sconv_od
+
+DATAFLOWS = ("SconvOD", "SconvIC", "MconvMC")
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _tile(n: int, target: int) -> int:
+    t = min(target, n)
+    while n % t:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("dataflow", "stride", "padding",
+                                             "interpret"))
+def conv2d(x: jax.Array, w: jax.Array, *, dataflow: str = "MconvMC",
+           stride: int = 1, padding: str = "VALID",
+           interpret: bool | None = None) -> jax.Array:
+    """Conv2d through one of the paper's accelerator dataflows.
+
+    x [N,H,W,Cin], w [KH,KW,Cin,Cout].
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    kh, kw, cin, cout = w.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+
+    if dataflow == "SconvOD":
+        out = sconv_od(x, w, cin_tile=_tile(cin, 8), interpret=interpret)
+    elif dataflow == "SconvIC":
+        ho = x.shape[1] - kh + 1
+        out = sconv_ic(x, w, row_tile=_tile(ho, 8), interpret=interpret)
+    elif dataflow == "MconvMC":
+        out = mconv_mc(x, w, cout_tile=_tile(cout, 128),
+                       cin_tile=_tile(cin, 32), interpret=interpret)
+    elif dataflow == "ref":
+        out = conv2d_ref(x, w)
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    if stride > 1:
+        out = out[:, ::stride, ::stride, :]
+    return out

@@ -1,0 +1,24 @@
+"""Pure-jnp conv2d oracle (im2col einsum — no lax.conv).
+
+Layout: x [N, H, W, Cin], w [KH, KW, Cin, Cout], stride 1, VALID padding.
+Output [N, H-KH+1, W-KW+1, Cout].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    n, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2
+    ho, wo = h - kh + 1, wd - kw + 1
+    out = jnp.zeros((n, ho, wo, cout), dtype=jnp.promote_types(x.dtype,
+                                                               jnp.float32))
+    for di in range(kh):
+        for dj in range(kw):
+            patch = x[:, di: di + ho, dj: dj + wo, :]  # [N, Ho, Wo, Cin]
+            out = out + jnp.einsum(
+                "nhwc,co->nhwo", patch.astype(jnp.float32),
+                w[di, dj].astype(jnp.float32))
+    return out.astype(x.dtype)

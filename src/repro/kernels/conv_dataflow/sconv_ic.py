@@ -1,0 +1,72 @@
+"""SconvIC — SSconv-IP-CR archetype (ShiDianNao) as a Pallas TPU kernel.
+
+Taxonomy mapping (DESIGN.md §3):
+  * SSconv: each BasicUnit iteration covers PART of a 2D convolution —
+    the grid tiles the OUTPUT rows, so one invocation computes one
+    output-row band (a sub-rectangle of the conv).
+  * IP (ifmaps propagate): the ifmap is VMEM-resident and read at kh*kw
+    shifted offsets — the shift-register ifmap propagation between PEs
+    becomes shifted slices of the resident block.
+  * CR (concentrated registers, never psums): the OUTPUT band is the
+    stationary operand (each "PE" owns one output neuron, ShiDianNao
+    style); psums never leave the accumulator until the band is done.
+
+Grid: (N, Ho_tiles) — fully parallel; no cross-step accumulation
+(contrast with SconvOD, where psums flow across sequential grid steps).
+The ifmap stays whole-height in VMEM (halo rows come for free); a
+production variant would use BoundedSlice halo windows instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, cin: int,
+            row_tile: int):
+    r = pl.program_id(1)
+    row0 = r * row_tile
+    wo = o_ref.shape[1]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # output-stationary: every (di, dj, ci) step broadcasts one filter tap
+    # to all output neurons; the ifmap slice "shifts" across the band (IP)
+    for di in range(kh):
+        for dj in range(kw):
+            for ci in range(cin):
+                plane = x_ref[pl.ds(row0 + di, row_tile),
+                              pl.ds(dj, wo), ci]                # [rt, Wo]
+                taps = w_ref[di, dj, ci, :]                     # [Cout]
+                acc += plane[:, :, None].astype(jnp.float32) * \
+                    taps[None, None, :].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def sconv_ic(x: jax.Array, w: jax.Array, *, row_tile: int = 8,
+             interpret: bool = False) -> jax.Array:
+    """x [N,H,W,Cin], w [KH,KW,Cin,Cout] -> [N,Ho,Wo,Cout] (stride 1, VALID)."""
+    n, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    row_tile = min(row_tile, ho)
+    assert ho % row_tile == 0, (ho, row_tile)
+    grid = (n, ho // row_tile)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, cin=cin, row_tile=row_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, h, wd, cin), lambda b, r: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda b, r: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, row_tile, wo, cout),
+                               lambda b, r: (b, r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        name="sconv_ic",
+    )(x, w)

@@ -1,0 +1,81 @@
+"""SconvOD — Sconv-OP-DR archetype (NeuFlow) as a Pallas TPU kernel.
+
+Taxonomy mapping (DESIGN.md §3):
+  * Sconv: one whole 2D convolution (one input channel's contribution to
+    all output pixels) per BasicUnit iteration.
+  * OP (ofmaps propagate): partial sums accumulate ACROSS sequential grid
+    steps over input channels — the VMEM accumulator plays the role of the
+    PE->PE psum FIFO chain.
+  * DR (dispersive registers): the filter taps for the current channel
+    slice stay resident (weight-stationary) while the ifmap streams —
+    per-PE weight registers become the resident VMEM filter block.
+
+Compute style: tap-by-tap shifted multiply-accumulate over the output
+plane (VPU lanes = the PE array), NOT an MXU matmul — matching the
+paper's "1 MAC per PE, no on-chip buffer" row of Table 10.
+
+Grid: (N, Cin_tiles) with the channel dim sequential ("arbitrary").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int, cin_tile: int):
+    ci_step = pl.program_id(1)
+    n_ci = pl.num_programs(1)
+
+    @pl.when(ci_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ho, wo = o_ref.shape[0], o_ref.shape[1]
+    acc = acc_ref[...]
+    # whole-2D-conv per channel: shifted planes x resident taps (VPU MACs)
+    for ci in range(cin_tile):
+        for di in range(kh):
+            for dj in range(kw):
+                plane = x_ref[di: di + ho, dj: dj + wo, ci]      # [Ho, Wo]
+                taps = w_ref[di, dj, ci, :]                      # [Cout]
+                acc += plane[:, :, None].astype(jnp.float32) * \
+                    taps[None, None, :].astype(jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ci_step == n_ci - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sconv_od(x: jax.Array, w: jax.Array, *, cin_tile: int = 8,
+             interpret: bool = False) -> jax.Array:
+    """x [N,H,W,Cin], w [KH,KW,Cin,Cout] -> [N,Ho,Wo,Cout] (stride 1, VALID)."""
+    n, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho, wo = h - kh + 1, wd - kw + 1
+    cin_tile = min(cin_tile, cin)
+    assert cin % cin_tile == 0
+    grid = (n, cin // cin_tile)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, cin_tile=cin_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, h, wd, cin_tile),
+                         lambda b, c: (b, 0, 0, c)),
+            pl.BlockSpec((kh, kw, cin_tile, cout),
+                         lambda b, c: (0, 0, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, ho, wo, cout),
+                               lambda b, c: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho, wo, cout), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="sconv_od",
+    )(x, w)

@@ -1,0 +1,39 @@
+"""jit'd wrapper: [B,S,H,D] GQA interface over the flat flash kernel."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_flat
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q [B,Sq,H,D]; k/v [B,Skv,K,D] with K dividing H (GQA broadcast)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    if kh != h:
+        reps = h // kh
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    scale = 1.0 / math.sqrt(d)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    of = flash_attention_flat(qf, kf, vf, causal=causal, scale=scale,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

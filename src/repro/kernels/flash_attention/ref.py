@@ -1,0 +1,18 @@
+"""Pure-jnp attention oracle."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool, scale: float):
+    """q [G, Sq, D], k/v [G, Skv, D] -> [G, Sq, D]."""
+    s = jnp.einsum("gqd,gkd->gqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("gqk,gkd->gqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

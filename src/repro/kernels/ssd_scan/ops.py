@@ -1,0 +1,32 @@
+"""jit'd wrapper for the SSD scan kernel ([B,S,H,P] interface)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_flat
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(u: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
+             chunk: int = 128, interpret: bool | None = None):
+    """u [B,S,H,P]; a [B,S,H]; Bm/Cm [B,S,N] (shared over heads).
+
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, p = u.shape
+    n = Bm.shape[-1]
+    uf = u.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    af = a.transpose(0, 2, 1).reshape(b * h, s)
+    y, sfin = ssd_scan_flat(uf, af, Bm, Cm, chunk=chunk, n_heads=h,
+                            interpret=interpret)
+    return (y.reshape(b, h, s, p).transpose(0, 2, 1, 3),
+            sfin.reshape(b, h, n, p))

@@ -1,0 +1,31 @@
+"""Pure-jnp SSD oracle: direct per-token recurrence (lax.scan over time).
+
+    h_t = exp(a_t) * h_{t-1} + B_t (outer) u_t
+    y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(u, a, Bm, Cm):
+    """u [G,S,P]; a [G,S]; Bm/Cm [G,S,N] (pre-broadcast to G).
+
+    Returns (y [G,S,P], final state [G,N,P]).
+    """
+    g, s, p = u.shape
+    n = Bm.shape[-1]
+
+    def step(h, inp):
+        u_t, a_t, b_t, c_t = inp
+        h = jnp.exp(a_t)[:, None, None] * h + jnp.einsum(
+            "gn,gp->gnp", b_t.astype(jnp.float32), u_t.astype(jnp.float32))
+        y_t = jnp.einsum("gn,gnp->gp", c_t.astype(jnp.float32), h)
+        return h, y_t
+
+    h0 = jnp.zeros((g, n, p), jnp.float32)
+    xs = (u.transpose(1, 0, 2), a.astype(jnp.float32).T,
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(u.dtype), h_fin

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins for every input (state,
+batch, caches — no device allocation), constructs NamedShardings from the
+logical-axis rules, lowers the appropriate step (train / prefill / serve),
+compiles it, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM
+  * cost_analysis()    — HLO FLOPs / bytes for the §Roofline terms
+  * collective operand bytes parsed from the optimized HLO text
+
+Usage:
+    python -m repro.launch.dryrun --arch mistral-large-123b --shape train_4k
+    python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+    python -m repro.launch.dryrun --all          # every cell, both meshes
+
+Results append to experiments/dryrun/results.jsonl (one JSON per cell).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, cell_applicable, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import model_api
+from repro.serve.engine import make_serve_step
+from repro.sharding import (DEFAULT_RULES, Param, activate, tree_shardings,
+                            unbox)
+from repro.sharding.partition import DECODE_RULES
+from repro.train.loop import TrainHyper, make_train_step, train_state_boxed
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO text.
+
+    HLO printers include operand types inline, e.g.
+    ``%ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %p), ...`` — the
+    first typed shape on the line is the output; subsequent ones are
+    operands.  We sum operand bytes per op type (the data each collective
+    reads, the §Roofline collective-term numerator).
+    """
+    out: dict = {op: {"count": 0, "operand_bytes": 0, "output_bytes": 0}
+                 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*[a-z0-9]+\[[0-9,]*\][^ ]*\s+([a-z0-9-]+)", stripped)
+        if not m:
+            continue
+        opname = m.group(1)
+        base = None
+        for op in COLLECTIVE_OPS:
+            if opname == op or opname.startswith(op + "-"):
+                base = op
+                break
+        if base is None:
+            continue
+        shapes = _SHAPE_RE.findall(stripped)
+        if not shapes:
+            continue
+        out_b = _shape_bytes(*shapes[0])
+        opnd_b = sum(_shape_bytes(d, s) for d, s in shapes[1:])
+        # tuple-shaped outputs print multiple leading shapes before the op
+        # name; fall back to output bytes when operands aren't inline.
+        if opnd_b == 0:
+            opnd_b = out_b
+        rec = out[base]
+        rec["count"] += 1
+        rec["operand_bytes"] += opnd_b
+        rec["output_bytes"] += out_b
+    out["total_operand_bytes"] = sum(
+        v["operand_bytes"] for k, v in out.items() if isinstance(v, dict))
+    out["total_count"] = sum(
+        v["count"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+def _shardings_for(boxed_tree, mesh, rules):
+    return tree_shardings(boxed_tree, mesh, rules)
+
+
+def build_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               rules=DEFAULT_RULES, cfg_overrides: dict | None = None):
+    """Returns (jitted_fn, example_args, in_shardings) ready to lower."""
+    cfg = get_config(arch_id)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    cell = SHAPES[shape_name]
+    if cell.step == "decode":
+        if rules is DEFAULT_RULES:
+            rules = DECODE_RULES
+        # serving params in bf16: halves any weight movement + HBM reads
+        import dataclasses as _dc2
+        cfg = _dc2.replace(cfg, param_dtype="bfloat16")
+    api = model_api(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    build_cell.last_rules = rules
+
+    boxed_batch = input_specs(cfg, shape_name)
+    batch_shardings = _shardings_for(boxed_batch, mesh, rules)
+    batch_sds = unbox(boxed_batch)
+
+    if cell.step == "train":
+        hyper = TrainHyper()
+        step_fn = make_train_step(api, hyper)
+        boxed_params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        boxed_state = train_state_boxed(boxed_params, hyper)
+        state_shardings = _shardings_for(boxed_state, mesh, rules)
+        state_sds = unbox(boxed_state)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_shardings, batch_shardings),
+                         donate_argnums=(0,))
+        args = (state_sds, batch_sds)
+    elif cell.step == "prefill":
+        step_fn = lambda params, batch: api.prefill(params, batch)
+        boxed_params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        param_shardings = _shardings_for(boxed_params, mesh, rules)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(param_shardings, batch_shardings))
+        args = (unbox(boxed_params), batch_sds)
+    else:  # decode
+        serve_step = make_serve_step(api)
+        boxed_params = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        param_shardings = _shardings_for(boxed_params, mesh, rules)
+        boxed_cache = jax.eval_shape(
+            lambda: api.init_cache(cell.global_batch, cell.seq_len))
+        cache_shardings = _shardings_for(boxed_cache, mesh, rules)
+        tok_shardings = batch_shardings["token"]
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(param_shardings, cache_shardings, tok_shardings,
+                          None),
+            donate_argnums=(1,))
+        args = (unbox(boxed_params), unbox(boxed_cache), batch_sds["token"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args, mesh, cfg
+
+
+def _probe_overrides(cfg, n_layers: int) -> dict:
+    """Overrides for a FLOPs-probe compile: unrolled layers, trip-1 inner
+    loops (single-chunk attention/SSD, no grad-accum scan) so XLA's
+    cost_analysis — which counts while-loop bodies ONCE — is exact."""
+    out = {
+        "num_layers": n_layers,
+        "scan_layers": False,
+        "use_grad_accum_microbatches": 1,
+        "attn_chunk_kv": 1 << 30,
+        "ssm_chunk": 1 << 30,
+    }
+    if cfg.is_encoder_decoder:
+        out["num_encoder_layers"] = n_layers
+    return out
+
+
+def probe_flops(arch_id: str, shape_name: str, multi_pod: bool,
+                rules=DEFAULT_RULES, cfg_overrides=None) -> dict:
+    """Two unrolled shallow compiles -> exact per-layer HLO cost, linearly
+    extrapolated to full depth:  F(L) = F1 + (L/period - 1) * (F2 - F1).
+
+    Needed because XLA cost_analysis counts a scan body once; the production
+    (scanned) compile is still what memory_analysis is taken from.
+    """
+    from repro.models.transformer import superblock_period
+    import dataclasses as _dc
+    cfg = get_config(arch_id)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    period = superblock_period(cfg)
+    n_super = cfg.num_layers // period
+    results = []
+    for mult in (1, 2):
+        over = dict(cfg_overrides or {})
+        over.update(_probe_overrides(cfg, period * mult))
+        jitted, args, mesh, _ = build_cell(arch_id, shape_name, multi_pod,
+                                           rules, over)
+        eff_rules = getattr(build_cell, "last_rules", rules)
+        with activate(mesh, eff_rules):
+            compiled = jitted.lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        results.append({
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_operand_bytes"]),
+        })
+    f1, f2 = results
+
+    def extrap(key):
+        # clamp: one-off setup costs in the 1-layer compile can exceed the
+        # 2-layer per-layer share, which would extrapolate negative
+        slope = max(0.0, f2[key] - f1[key])
+        return f1[key] + max(0, n_super - 1) * slope
+
+    return {
+        "flops_per_device": extrap("flops"),
+        "bytes_accessed_per_device": extrap("bytes"),
+        "collective_operand_bytes": extrap("coll_bytes"),
+        "per_superblock_flops": f2["flops"] - f1["flops"],
+        "per_superblock_coll_bytes": f2["coll_bytes"] - f1["coll_bytes"],
+        "n_superblocks": n_super,
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             rules=DEFAULT_RULES, cfg_overrides=None, save_hlo: str = "",
+             rules_tag: str = "default", do_probe: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "rules": rules_tag, "status": "ok"}
+    ok, why = cell_applicable(get_config(arch_id), shape_name)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    t0 = time.time()
+    try:
+        jitted, args, mesh, cfg = build_cell(
+            arch_id, shape_name, multi_pod, rules, cfg_overrides)
+        eff_rules = getattr(build_cell, "last_rules", rules)
+        with activate(mesh, eff_rules):
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        cell = SHAPES[shape_name]
+        n_tokens = cell.global_batch * cell.seq_len if cell.step != "decode" \
+            else cell.global_batch
+        rec.update({
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "devices": int(mesh.size),
+            "tokens": n_tokens,
+            "peak_bytes_per_device": int(ma.peak_memory_in_bytes),
+            "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+            "output_bytes_per_device": int(ma.output_size_in_bytes),
+            "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals_per_device": float(
+                ca.get("transcendentals", 0.0)),
+            "collectives": coll,
+            "param_count": int(cfg.param_count()),
+            "active_param_count": int(cfg.active_param_count()),
+            "hlo_bytes": len(hlo),
+        })
+        if do_probe:
+            try:
+                rec["probe"] = probe_flops(arch_id, shape_name, multi_pod,
+                                           rules, cfg_overrides)
+            except Exception as e:  # noqa: BLE001
+                rec["probe"] = {"error": f"{type(e).__name__}: {e}"}
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun/results.jsonl")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args(argv)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        # the roofline table reads single-pod cells only; skip the probe
+        # compiles for multi-pod (memory/collective parse still recorded)
+        rec = run_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                       do_probe=not mp)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f"peak={rec['peak_bytes_per_device']/2**30:.2f}GiB "
+                     f"flops={rec['flops_per_device']:.3g} "
+                     f"coll={rec['collectives']['total_operand_bytes']/2**30:.2f}GiB "
+                     f"compile={rec['compile_s']}s")
+        elif status == "failed":
+            failures += 1
+            extra = rec["error"]
+        print(f"[{status:7s}] {arch} x {shape} x "
+              f"{'multi' if mp else 'single'}-pod {extra}", flush=True)
+    if failures:
+        print(f"{failures} cell(s) FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not module-level state) so importing
+this module never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benchmarks see the real (1-device) platform.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,83 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+        --steps 100 --ckpt-dir /tmp/ckpt
+
+Runs the fault-tolerant training driver (checkpoint every N steps, SIGTERM
+preemption handling, deterministic restart).  On a real pod the same entry
+point runs per host with jax.distributed initialization; on this container
+it exercises the identical code path on the local device.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.api import model_api
+from repro.sharding import unbox
+from repro.train.data import DataConfig, batch_fn
+from repro.train.fault_tolerance import (PreemptionGuard, elastic_restore,
+                                         run_with_fault_tolerance)
+from repro.train.loop import TrainHyper, init_train_state, make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    api = model_api(cfg)
+    hyper = TrainHyper(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                       total_steps=args.steps, compression=args.compression)
+    data = DataConfig(batch_size=args.batch_size, seq_len=args.seq_len)
+    bat = batch_fn(cfg, data)
+    step = jax.jit(make_train_step(api, hyper))
+
+    params = unbox(api.init(jax.random.PRNGKey(0)))
+    state = init_train_state(params, hyper)
+    n_params = sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"steps={args.steps} compression={hyper.compression}")
+
+    restored, start = elastic_restore(args.ckpt_dir, jax.device_get(state))
+    if restored is not None:
+        state = restored
+        print(f"restored checkpoint at step {start}")
+
+    guard = PreemptionGuard()
+    losses = []
+
+    def on_metrics(s, m):
+        losses.append(float(m["loss"]))
+        if s % args.log_every == 0:
+            print(f"step {s}: loss={losses[-1]:.4f} "
+                  f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f}",
+                  flush=True)
+
+    res = run_with_fault_tolerance(
+        step, state, bat, num_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, start_step=start, guard=guard,
+        on_metrics=on_metrics)
+    print(f"done: steps={res.completed_steps} interrupted={res.interrupted} "
+          f"final_loss={losses[-1] if losses else float('nan'):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Family-dispatched model API: one namespace for train/serve/dry-run.
+
+Usage::
+
+    api = model_api(cfg)
+    params = api.init(key)                     # boxed Param tree
+    loss, metrics = api.loss(unbox(params), batch)
+    logits, cache = api.decode_step(params, cache, token, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    prefill: Callable       # (params, batch) -> (last_logits, cache)
+    decode_step: Callable   # (params, cache, token, pos) -> (logits, cache)
+    init_cache: Callable    # (batch_size, seq_len, ...) -> boxed cache
+
+
+def model_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.is_encoder_decoder:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: ED.init_encdec(key, cfg),
+            loss=lambda p, b: ED.encdec_loss(p, cfg, b),
+            prefill=lambda p, b: ED.encdec_prefill(p, cfg, b),
+            decode_step=lambda p, c, t, pos: ED.encdec_decode_step(
+                p, cfg, c, t, pos),
+            init_cache=lambda bs, s, src_len=None: ED.init_encdec_cache(
+                cfg, bs, s, src_len or max(1, s // cfg.encoder_seq_ratio)),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: T.init_lm(key, cfg),
+        loss=lambda p, b: T.lm_loss(p, cfg, b),
+        prefill=lambda p, b: T.lm_prefill(p, cfg, b),
+        decode_step=lambda p, c, t, pos: T.lm_decode_step(p, cfg, c, t, pos),
+        init_cache=lambda bs, s, **_: T.init_cache(cfg, bs, s),
+    )

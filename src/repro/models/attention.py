@@ -1,0 +1,465 @@
+"""Attention: GQA/MHA, sliding-window (SWA), and MLA (latent) variants.
+
+Three execution paths, all numerically equivalent where they overlap:
+
+* ``naive``     — full-scores attention (small tests / oracles).
+* ``chunked``   — lax.scan over KV chunks with online softmax (the XLA
+                  fallback for TPU; bounded VMEM-sized working set).
+* SWA prefill   — exact chunk+neighbour decomposition (each query chunk of
+                  width W attends to its own and the previous KV chunk only),
+                  giving true O(S·W) compute, not masked O(S²).
+
+Decode paths read a KV cache whose sequence dim may be sharded over the
+"model" mesh axis (flash-decoding style: partial softmax + all-reduce,
+inserted by GSPMD from the sharding constraints).
+
+GQA is computed by broadcasting KV heads to query heads *inside* the chunk
+loop; XLA fuses the broadcast, so stored cache stays [B, S, K, D] while the
+matmuls shard cleanly over flat query heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import with_logical_constraint as wlc
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, param_dtype) -> dict:
+    if cfg.attention_kind == "mla":
+        return init_mla_attention(key, cfg, param_dtype)
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(k1, (d, h, hd), ("embed", "heads", "head_dim"),
+                           param_dtype, fan_in=d),
+        "wk": L.dense_init(k2, (d, k, hd), ("embed", "kv_heads", "head_dim"),
+                           param_dtype, fan_in=d),
+        "wv": L.dense_init(k3, (d, k, hd), ("embed", "kv_heads", "head_dim"),
+                           param_dtype, fan_in=d),
+        "wo": L.dense_init(k4, (h, hd, d), ("heads", "head_dim", "embed"),
+                           param_dtype, fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.ones_init((hd,), ("head_dim",), param_dtype)
+        p["k_norm"] = L.ones_init((hd,), ("head_dim",), param_dtype)
+    return p
+
+
+def init_mla_attention(key, cfg: ModelConfig, param_dtype) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    keys = jax.random.split(key, 7)
+    p = {
+        "wkv_a": L.dense_init(keys[2], (d, kvr + rope), ("embed", "lora"),
+                              param_dtype, fan_in=d),
+        "kv_norm": L.ones_init((kvr,), ("lora",), param_dtype),
+        "wk_b": L.dense_init(keys[3], (kvr, h, nope), ("lora", "heads", "head_dim"),
+                             param_dtype, fan_in=kvr),
+        "wv_b": L.dense_init(keys[4], (kvr, h, vd), ("lora", "heads", "head_dim"),
+                             param_dtype, fan_in=kvr),
+        "wo": L.dense_init(keys[5], (h, vd, d), ("heads", "head_dim", "embed"),
+                           param_dtype, fan_in=h * vd),
+    }
+    if qr:
+        p["wq_a"] = L.dense_init(keys[0], (d, qr), ("embed", "lora"),
+                                 param_dtype, fan_in=d)
+        p["q_norm"] = L.ones_init((qr,), ("lora",), param_dtype)
+        p["wq_b"] = L.dense_init(keys[1], (qr, h, nope + rope),
+                                 ("lora", "heads", "head_dim"),
+                                 param_dtype, fan_in=qr)
+    else:
+        p["wq"] = L.dense_init(keys[0], (d, h, nope + rope),
+                               ("embed", "heads", "head_dim"),
+                               param_dtype, fan_in=d)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention primitives
+# ---------------------------------------------------------------------------
+
+def _broadcast_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """[B, T, K, D] -> [B, T, H, D] by repeating each KV head H//K times."""
+    b, t, kh, d = k.shape
+    if kh == num_heads:
+        return k
+    reps = num_heads // kh
+    return jnp.repeat(k, reps, axis=2)
+
+
+def naive_attention(q, k, v, *, causal: bool, scale: float,
+                    window: Optional[int] = None,
+                    q_offset: int | jax.Array = 0) -> jax.Array:
+    """q [B,S,H,D], k/v [B,T,K,D]. Full-score reference path."""
+    h = q.shape[2]
+    k = _broadcast_kv(k, h)
+    v = _broadcast_kv(v, h)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    sq, tk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((sq, tk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, scale: float,
+                      chunk_kv: int, window: Optional[int] = None,
+                      q_offset: int | jax.Array = 0) -> jax.Array:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q [B,S,H,D]; k/v [B,T,K,D]. Working set per step is one KV chunk
+    broadcast to H heads — this is the XLA analogue of flash attention.
+    """
+    b, s, h, d = q.shape
+    dv = v.shape[-1]  # may differ from d (MLA: qk dim 96, v dim 64)
+    t = k.shape[1]
+    chunk_kv = min(chunk_kv, t)
+    n_chunks = -(-t // chunk_kv)
+    pad = n_chunks * chunk_kv - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk_kv, k.shape[2], d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk_kv, v.shape[2], dv).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(s)[:, None] + q_offset  # [S, 1]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, k_blk, v_blk = inp
+        k_blk = _broadcast_kv(k_blk, h)
+        v_blk = _broadcast_kv(v_blk, h)
+        scores = jnp.einsum("bshd,bthd->bhst", qf, k_blk.astype(jnp.float32)) * scale
+        kpos = idx * chunk_kv + jnp.arange(chunk_kv)[None, :]
+        mask = kpos < t  # padding
+        if causal:
+            mask = mask & (qpos >= kpos)
+        if window is not None:
+            mask = mask & ((qpos - kpos) < window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, h, s), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, h, s, dv), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,S,H,D]
+
+
+def sliding_window_attention(q, k, v, *, scale: float, window: int) -> jax.Array:
+    """Exact causal SWA via chunk+neighbour decomposition: O(S·W) compute.
+
+    Requires q and k aligned (self-attention, q_offset == 0). Sequence is
+    padded to a multiple of W; each query chunk attends to [prev, self]
+    KV chunks with an exact relative-position mask.
+    """
+    b, s, h, d = q.shape
+    k = _broadcast_kv(k, h)
+    v = _broadcast_kv(v, h)
+    w = window
+    n = -(-s // w)
+    pad = n * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(b, n, w, h, d)
+    kc = k.reshape(b, n, w, h, d)
+    vc = v.reshape(b, n, w, h, d)
+    # previous chunk (chunk -1 = zeros, fully masked)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kc], axis=2)  # [B, n, 2W, H, D]
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", qc.astype(jnp.float32),
+                        k2.astype(jnp.float32)) * scale
+    qpos = jnp.arange(w)[:, None]            # within-chunk query pos
+    kpos = jnp.arange(2 * w)[None, :] - w    # relative chunk-local key pos
+    rel = qpos - kpos                        # in [1-w, 2w-1]
+    mask = (rel >= 0) & (rel < w)
+    first = jnp.arange(n) == 0               # first chunk has no prev
+    mask_first = mask & (kpos >= 0)
+    full_mask = jnp.where(first[:, None, None], mask_first[None], mask[None])
+    scores = jnp.where(full_mask[None, :, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", probs, v2.astype(jnp.float32))
+    out = out.reshape(b, n * w, h, d)
+    return out[:, :s].astype(q.dtype)
+
+
+def attention_core(q, k, v, cfg: ModelConfig, *, causal=True,
+                   window=None, q_offset=0) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if window is not None and causal and cfg.attention_impl != "naive" \
+            and q.shape[1] == k.shape[1] and q.shape[1] > window:
+        return sliding_window_attention(q, k, v, scale=scale, window=window)
+    if cfg.attention_impl == "naive" or q.shape[1] * k.shape[1] <= 512 * 512:
+        return naive_attention(q, k, v, causal=causal, scale=scale,
+                               window=window, q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, scale=scale,
+                             chunk_kv=cfg.attn_chunk_kv, window=window,
+                             q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+class KVCacheEntry(NamedTuple):
+    k: jax.Array  # [B, S, K, D]  (GQA)  /  latent [B, S, R] (MLA)
+    v: jax.Array  # [B, S, K, D]         /  rope   [B, S, P] (MLA)
+
+
+def gqa_apply(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              *, causal: bool = True, window: Optional[int] = None,
+              return_cache: bool = False):
+    """x [B,S,E] -> [B,S,E] (+ optional KV cache entries)."""
+    dt = x.dtype
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    k = jnp.einsum("bse,ekd->bskd", x, p["wk"].astype(dt))
+    v = jnp.einsum("bse,ekd->bskd", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = wlc(q, ("batch", None, "heads", "head_dim"))
+    k = wlc(k, ("batch", None, "kv_heads", "head_dim"))
+    v = wlc(v, ("batch", None, "kv_heads", "head_dim"))
+    out = attention_core(q, k, v, cfg, causal=causal, window=window)
+    out = wlc(out, ("batch", None, "heads", "head_dim"))
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    y = wlc(y, ("batch", None, None))
+    if return_cache:
+        # cache leaves the step as output: shard seq over "model" so the
+        # per-device slice is cache/(batch_shards*model) not cache/batch
+        k = wlc(k, ("cache_batch", "kv_seq", "kv_heads", "head_dim"))
+        v = wlc(v, ("cache_batch", "kv_seq", "kv_heads", "head_dim"))
+        return y, KVCacheEntry(k=k, v=v)
+    return y
+
+
+def gqa_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: KVCacheEntry,
+               pos: jax.Array, *, window: Optional[int] = None):
+    """One-token decode. x [B,1,E]; cache k/v [B,S,K,D]; pos scalar int.
+
+    The cache sequence dim may be sharded ("kv_seq" -> "model"); the partial
+    softmax across shards is GSPMD-inserted (flash-decoding).  The new KV is
+    written at ``pos`` via dynamic_update_slice.
+    """
+    dt = x.dtype
+    b = x.shape[0]
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    k_new = jnp.einsum("bse,ekd->bskd", x, p["wk"].astype(dt))
+    v_new = jnp.einsum("bse,ekd->bskd", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k_new = L.rmsnorm(p["k_norm"], k_new, cfg.norm_eps)
+    posb = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k_new = L.apply_rope(k_new, posb, cfg.rope_theta)
+
+    s_cache = cache.k.shape[1]
+    if window is not None and s_cache >= window:
+        # ring-buffer semantics: cache holds last `window` positions
+        write_at = jax.lax.rem(pos, jnp.int32(s_cache))
+    else:
+        write_at = pos
+    k_all = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, write_at, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, write_at, 0, 0))
+    k_all = wlc(k_all, ("cache_batch", "kv_seq", "kv_heads", "head_dim"))
+    v_all = wlc(v_all, ("cache_batch", "kv_seq", "kv_heads", "head_dim"))
+
+    # Grouped-head attention (no KV broadcast materialization: repeating
+    # K->H would write a 12x-inflated cache copy through HBM each step).
+    h = q.shape[2]
+    kh = k_all.shape[2]
+    g = h // kh
+    b_ = q.shape[0]
+    qg = q.reshape(b_, 1, kh, g, q.shape[-1])
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k_all.astype(jnp.float32)) * scale  # [B,K,G,1,S]
+    kpos = jnp.arange(s_cache)[None, None, None, None, :]
+    # Full cache: slots > pos are future positions.  Ring buffer (SWA): every
+    # written slot is in-window by construction, and `kpos <= pos` masks
+    # exactly the not-yet-written slots during warmup (all-true once wrapped).
+    valid = kpos <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    # flash-decoding: keep scores sharded along the cache sequence dim
+    # (matching the cache layout); the softmax max/sum and the PV partial
+    # sums become small all-reduces over "model".
+    scores = wlc(scores, ("cache_batch", None, None, None, "kv_seq"))
+    # stable softmax with f32 stats, bf16 probs for the PV read (halves the
+    # biggest HBM stream at decode; max-subtracted exps are bf16-safe)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = (e / denom).astype(dt)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_all.astype(dt))
+    out = out.reshape(b_, 1, h, q.shape[-1])
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    y = wlc(y, ("batch", None, None))
+    return y, KVCacheEntry(k=k_all, v=v_all)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, cfg: ModelConfig, x, positions):
+    dt = x.dtype
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bse,er->bsr", x, p["wq_a"].astype(dt))
+        cq = L.rmsnorm(p["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhd->bshd", cq, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              *, causal: bool = True, return_cache: bool = False):
+    """MLA prefill/train: latent is expanded to per-head K/V (standard path)."""
+    dt = x.dtype
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+
+    ckv = jnp.einsum("bse,er->bsr", x, p["wkv_a"].astype(dt))
+    c_kv, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = L.rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["wv_b"].astype(dt))
+    h = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_rope.shape[:2], h, rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = wlc(q, ("batch", None, "heads", "head_dim"))
+    k = wlc(k, ("batch", None, "heads", "head_dim"))
+    v = wlc(v, ("batch", None, "heads", "head_dim"))
+    out = attention_core(q, k, v, cfg, causal=causal)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    y = wlc(y, ("batch", None, None))
+    if return_cache:
+        c_kv = wlc(c_kv, ("cache_batch", "kv_seq", "lora"))
+        k_r = wlc(k_rope[:, :, 0, :], ("cache_batch", "kv_seq", "lora"))
+        return y, KVCacheEntry(k=c_kv, v=k_r)
+    return y
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: KVCacheEntry,
+               pos: jax.Array):
+    """Weight-absorbed MLA decode (DeepSeek-V2 style).
+
+    Cache stores the compressed latent [B,S,R] + rope key [B,S,P]: per-token
+    cache bytes are (R+P), independent of head count.  Queries are absorbed
+    into latent space, so decode attends MQA-style over the latent.
+    """
+    dt = x.dtype
+    b = x.shape[0]
+    q_nope, q_rope = _mla_q(p, cfg, x, jnp.full((b, 1), pos, dtype=jnp.int32))
+
+    ckv = jnp.einsum("bse,er->bsr", x, p["wkv_a"].astype(dt))
+    c_new, kr_new = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_new = L.rmsnorm(p["kv_norm"], c_new, cfg.norm_eps)
+    kr_new = L.apply_rope(kr_new[:, :, None, :],
+                          jnp.full((b, 1), pos, dtype=jnp.int32),
+                          cfg.rope_theta)[:, :, 0, :]
+
+    c_all = jax.lax.dynamic_update_slice(
+        cache.k, c_new.astype(cache.k.dtype), (0, pos, 0))
+    kr_all = jax.lax.dynamic_update_slice(
+        cache.v, kr_new.astype(cache.v.dtype), (0, pos, 0))
+    c_all = wlc(c_all, ("cache_batch", "kv_seq", "lora"))
+    kr_all = wlc(kr_all, ("cache_batch", "kv_seq", "lora"))
+
+    # absorb: q_nope' = q_nope @ wk_b^T  -> latent-space queries [B,1,H,R]
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, p["wk_b"].astype(dt))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s_nope = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        c_all.astype(jnp.float32))
+    s_rope = jnp.einsum("bshp,btp->bhst", q_rope.astype(jnp.float32),
+                        kr_all.astype(jnp.float32))
+    scores = (s_nope + s_rope) * scale
+    s_cache = c_all.shape[1]
+    valid = jnp.arange(s_cache)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    scores = wlc(scores, ("cache_batch", None, None, "kv_seq"))
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, c_all.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhd->bshd", o_lat.astype(dt), p["wv_b"].astype(dt))
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    y = wlc(y, ("batch", None, None))
+    return y, KVCacheEntry(k=c_all, v=kr_all)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig, param_dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, (d, h, hd), ("embed", "heads", "head_dim"),
+                           param_dtype, fan_in=d),
+        "wk": L.dense_init(k2, (d, h, hd), ("embed", "heads", "head_dim"),
+                           param_dtype, fan_in=d),
+        "wv": L.dense_init(k3, (d, h, hd), ("embed", "heads", "head_dim"),
+                           param_dtype, fan_in=d),
+        "wo": L.dense_init(k4, (h, hd, d), ("heads", "head_dim", "embed"),
+                           param_dtype, fan_in=h * hd),
+    }
+
+
+def cross_attention_kv(p: dict, enc_out: jax.Array) -> KVCacheEntry:
+    dt = enc_out.dtype
+    k = jnp.einsum("bte,ehd->bthd", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bte,ehd->bthd", enc_out, p["wv"].astype(dt))
+    return KVCacheEntry(k=k, v=v)
+
+
+def cross_attention_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+                          kv: KVCacheEntry) -> jax.Array:
+    dt = x.dtype
+    q = jnp.einsum("bse,ehd->bshd", x, p["wq"].astype(dt))
+    q = wlc(q, ("batch", None, "heads", "head_dim"))
+    out = attention_core(q, kv.k, kv.v, cfg, causal=False)
+    y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(dt))
+    return wlc(y, ("batch", None, None))

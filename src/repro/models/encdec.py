@@ -1,0 +1,181 @@
+"""Encoder–decoder transformer (seamless-m4t backbone).
+
+The speech frontend is a stub: ``frontend_embeds`` [B, T_src, d_model] arrive
+precomputed (fbank-frame embeddings) per the assignment brief; a learned
+projector maps them into the encoder.  Decoder layers are
+self-attn -> cross-attn -> FFN; decode carries a self-attention KV cache plus
+per-layer cross KV computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.transformer import stack_init, _slice_layer
+from repro.sharding import Param, with_logical_constraint as wlc
+
+
+def _init_enc_block(key, cfg: ModelConfig, pdt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.init_rmsnorm(cfg.d_model, pdt),
+        "attn": A.init_attention(k1, cfg, pdt),
+        "norm2": L.init_rmsnorm(cfg.d_model, pdt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, pdt),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig, pdt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_rmsnorm(cfg.d_model, pdt),
+        "self_attn": A.init_attention(k1, cfg, pdt),
+        "norm_x": L.init_rmsnorm(cfg.d_model, pdt),
+        "cross_attn": A.init_cross_attention(k2, cfg, pdt),
+        "norm2": L.init_rmsnorm(cfg.d_model, pdt),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, pdt),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    return {
+        "projector": L.init_mlp(keys[0], cfg.d_model, cfg.d_model * 2, pdt),
+        "embed": L.init_embedding(keys[1], cfg.vocab_size, cfg.d_model, pdt),
+        "enc_blocks": stack_init(lambda k: _init_enc_block(k, cfg, pdt),
+                                 keys[2], cfg.num_encoder_layers),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, pdt),
+        "dec_blocks": stack_init(lambda k: _init_dec_block(k, cfg, pdt),
+                                 keys[3], cfg.num_layers),
+        "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+        "unembed": L.embed_init(keys[4], (cfg.vocab_size, cfg.d_model),
+                                ("vocab", "embed"), pdt,
+                                scale=1.0 / (cfg.d_model ** 0.5)),
+    }
+
+
+def encode(params, cfg: ModelConfig, frontend_embeds: jax.Array) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    x = L.mlp_apply(params["projector"], frontend_embeds.astype(dt))
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        x = x + A.gqa_apply(p["attn"], cfg, h, positions, causal=False)
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h2)
+        return wlc(x, ("batch", "seq", None)), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(p, cfg, spec_unused, x, positions, enc_out):
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + A.gqa_apply(p["self_attn"], cfg, h, positions, causal=True)
+    hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+    kv = A.cross_attention_kv(p["cross_attn"], enc_out)
+    x = x + A.cross_attention_apply(p["cross_attn"], cfg, hx, kv)
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h2)
+    return wlc(x, ("batch", "seq", None))
+
+
+def encdec_loss(params, cfg: ModelConfig, batch: dict):
+    """batch: frontend_embeds [B,T_src,D], tokens [B,S], labels, loss_mask."""
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, batch["frontend_embeds"])
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, p):
+        return _dec_block(p, cfg, None, x, positions, enc_out), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed_logits(params["unembed"], x, jnp.dtype(cfg.logits_dtype))
+    loss = L.softmax_cross_entropy(logits, batch["labels"],
+                                   batch.get("loss_mask"))
+    return loss, {"loss": loss,
+                  "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch: dict):
+    """Encode + run decoder prompt; build self-cache and cross-KV."""
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, batch["frontend_embeds"])
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        mix, entry = A.gqa_apply(p["self_attn"], cfg, h, positions,
+                                 causal=True, return_cache=True)
+        x = x + mix
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        kv = A.cross_attention_kv(p["cross_attn"], enc_out)
+        x = x + A.cross_attention_apply(p["cross_attn"], cfg, hx, kv)
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h2)
+        return x, {"self": entry, "cross": kv}
+
+    x, cache = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed_logits(params["unembed"], x[:, -1:, :],
+                              jnp.dtype(cfg.logits_dtype))
+    return logits, cache
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, token, pos):
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], token, dt)
+
+    def body(x, scanned):
+        p, cache_slice = scanned
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        mix, new_self = A.gqa_decode(p["self_attn"], cfg, h,
+                                     cache_slice["self"], pos)
+        x = x + mix
+        hx = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + A.cross_attention_apply(p["cross_attn"], cfg, hx,
+                                        cache_slice["cross"])
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h2)
+        return x, {"self": new_self, "cross": cache_slice["cross"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed_logits(params["unembed"], x, jnp.dtype(cfg.logits_dtype))
+    return logits, new_cache
+
+
+def init_encdec_cache(cfg: ModelConfig, batch_size: int, seq_len: int,
+                      src_len: int):
+    """Boxed zero cache for decode dry-run: self KV + cross KV per layer."""
+    dt = jnp.dtype(cfg.dtype)
+    n = cfg.num_layers
+    kv_shape = (n, batch_size, seq_len, cfg.num_kv_heads, cfg.head_dim)
+    kv_axes = ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")
+    cross_shape = (n, batch_size, src_len, cfg.num_heads, cfg.head_dim)
+    cross_axes = ("layers", "cache_batch", None, "heads", "head_dim")
+    return {
+        "self": A.KVCacheEntry(
+            k=Param(jnp.zeros(kv_shape, dt), kv_axes),
+            v=Param(jnp.zeros(kv_shape, dt), kv_axes)),
+        "cross": A.KVCacheEntry(
+            k=Param(jnp.zeros(cross_shape, dt), cross_axes),
+            v=Param(jnp.zeros(cross_shape, dt), cross_axes)),
+    }

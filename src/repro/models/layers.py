@@ -1,0 +1,169 @@
+"""Core building blocks: initializers, norms, embeddings, RoPE, MLPs.
+
+All parameters are created as :class:`repro.sharding.Param` boxes carrying
+logical axis names.  ``apply``-side functions consume *unboxed* value trees
+and cast to the compute dtype at use sites.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Param, with_logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Param creation
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape: Sequence[int], axes: Sequence[str], dtype,
+               fan_in: int | None = None, scale: float = 1.0) -> Param:
+    """Scaled-normal (LeCun-ish) init for a dense kernel."""
+    if fan_in is None:
+        fan_in = shape[0]
+    std = scale / math.sqrt(max(fan_in, 1))
+    val = (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+    return Param(val, tuple(axes))
+
+
+def embed_init(key, shape, axes, dtype, scale: float = 1.0) -> Param:
+    val = (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+    return Param(val, tuple(axes))
+
+
+def zeros_init(shape, axes, dtype) -> Param:
+    return Param(jnp.zeros(shape, dtype=dtype), tuple(axes))
+
+
+def ones_init(shape, axes, dtype) -> Param:
+    return Param(jnp.ones(shape, dtype=dtype), tuple(axes))
+
+
+def const_init(value, axes) -> Param:
+    return Param(value, tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, param_dtype) -> Param:
+    return ones_init((d,), ("embed",), param_dtype)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, param_dtype) -> dict:
+    return {
+        "scale": ones_init((d,), ("embed",), param_dtype),
+        "bias": zeros_init((d,), ("embed",), param_dtype),
+    }
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, param_dtype) -> Param:
+    return embed_init(key, (vocab, d), ("vocab", "embed"), param_dtype,
+                      scale=1.0 / math.sqrt(d))
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    """[V, D] x [..., S] -> [..., S, D].
+
+    One-hot matmul would shard better over "vocab", but for the assigned
+    vocab sizes gather + all-reduce is what XLA picks anyway; take() keeps
+    the HLO small.
+    """
+    out = jnp.take(table, tokens, axis=0).astype(dtype)
+    return with_logical_constraint(out, ("batch", None, None))
+
+
+def unembed_logits(table: jax.Array, x: jax.Array, dtype) -> jax.Array:
+    """[..., S, D] x [V, D] -> [..., S, V]."""
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x, table.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    logits = with_logical_constraint(logits, ("batch", None, "vocab"))
+    return logits.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int). Pairs (even, odd halves)."""
+    freqs = rope_frequencies(x.shape[-1], theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, param_dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d, f), ("embed", "mlp"), param_dtype, fan_in=d),
+        "wi_up": dense_init(k2, (d, f), ("embed", "mlp"), param_dtype, fan_in=d),
+        "wo": dense_init(k3, (f, d), ("mlp", "embed"), param_dtype, fan_in=f),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+    h = jax.nn.silu(gate) * up
+    h = with_logical_constraint(h, ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return with_logical_constraint(out, ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None):
+    """logits [B,S,V] (fp32), labels [B,S] int. Returns mean loss (masked)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    label_logits = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    )[..., 0]
+    nll = logz - label_logits
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

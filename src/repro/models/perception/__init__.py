@@ -1,0 +1,18 @@
+from repro.models.perception.cnn import (
+    ConvNetSpec,
+    init_convnet,
+    convnet_apply,
+    convnet_stats,
+)
+from repro.models.perception.nets import (
+    YOLO_SPEC,
+    SSD_SPEC,
+    GOTURN_SPEC,
+    PERCEPTION_SPECS,
+    init_yolo,
+    yolo_apply,
+    init_ssd,
+    ssd_apply,
+    init_goturn,
+    goturn_apply,
+)

@@ -1,0 +1,173 @@
+"""Generic CNN substrate for the paper's perception workloads.
+
+Networks are declared as layer-spec lists so the same definition yields
+(a) a runnable JAX model, (b) analytic MACs / parameter counts (Table 1),
+and (c) per-layer workload descriptors consumed by the HMAI accelerator
+performance model (`repro.core.hmai`).
+
+Layer kinds:
+    ("conv", c_out, k, stride)       conv + bias + leaky-relu
+    ("maxpool", k, stride)
+    ("residual", n_back)             add output of layer i-n_back
+    ("globalpool",)                  spatial mean
+    ("fc", n_out)                    dense + leaky-relu (flattens if needed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import Param
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNetSpec:
+    name: str
+    layers: tuple  # tuple of layer-kind tuples
+    in_channels: int = 3
+    input_hw: int = 416  # nominal full-scale input resolution
+
+
+def _leaky(x):
+    return jax.nn.leaky_relu(x, 0.1)
+
+
+def init_convnet(key, spec: ConvNetSpec, width_mult: float = 1.0,
+                 param_dtype=jnp.float32) -> list:
+    """Returns a list of per-layer param dicts (None for param-free)."""
+    params = []
+    c_in = spec.in_channels
+    hw = spec.input_hw
+    keys = jax.random.split(key, len(spec.layers))
+    flat_dim = None
+    for i, layer in enumerate(spec.layers):
+        kind = layer[0]
+        if kind == "conv":
+            _, c_out, k, stride = layer
+            c_out = max(4, int(c_out * width_mult))
+            w = L.dense_init(keys[i], (k, k, c_in, c_out),
+                             ("conv_kernel", "conv_kernel", "unsharded", "mlp"),
+                             param_dtype, fan_in=k * k * c_in)
+            b = L.zeros_init((c_out,), ("mlp",), param_dtype)
+            params.append({"w": w, "b": b})
+            c_in = c_out
+            hw = -(-hw // stride)
+        elif kind == "maxpool":
+            _, k, stride = layer
+            hw = -(-hw // stride)
+            params.append(None)
+        elif kind == "residual":
+            params.append(None)
+        elif kind == "globalpool":
+            flat_dim = c_in
+            hw = 1
+            params.append(None)
+        elif kind == "fc":
+            _, n_out = layer
+            n_out = max(4, int(n_out * width_mult))
+            d_in = flat_dim if flat_dim is not None else c_in * hw * hw
+            w = L.dense_init(keys[i], (d_in, n_out), ("embed", "mlp"),
+                             param_dtype, fan_in=d_in)
+            b = L.zeros_init((n_out,), ("mlp",), param_dtype)
+            params.append({"w": w, "b": b})
+            flat_dim = n_out
+            c_in = n_out
+        else:
+            raise ValueError(kind)
+    return params
+
+
+def convnet_apply(params: list, spec: ConvNetSpec, x: jax.Array,
+                  return_features: bool = False):
+    """x: [B, H, W, C]. Returns final output (and per-layer features)."""
+    feats = []
+    flat = None
+    for layer, p in zip(spec.layers, params):
+        kind = layer[0]
+        if kind == "conv":
+            _, _, k, stride = layer
+            w = p["w"].astype(x.dtype)
+            x = jax.lax.conv_general_dilated(
+                x, w, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = _leaky(x + p["b"].astype(x.dtype))
+        elif kind == "maxpool":
+            _, k, stride = layer
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+                "SAME")
+        elif kind == "residual":
+            x = x + feats[len(feats) - layer[1]]
+        elif kind == "globalpool":
+            x = jnp.mean(x, axis=(1, 2))
+            flat = x
+        elif kind == "fc":
+            inp = flat if flat is not None else x.reshape(x.shape[0], -1)
+            x = _leaky(inp @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype))
+            flat = x
+        feats.append(x)
+    if return_features:
+        return x, feats
+    return x
+
+
+def convnet_stats(spec: ConvNetSpec, width_mult: float = 1.0) -> dict:
+    """Analytic MACs / params / per-layer workload (full-scale input)."""
+    c_in = spec.in_channels
+    hw = spec.input_hw
+    macs = 0
+    n_params = 0
+    n_neurons = 0
+    per_layer = []
+    flat_dim = None
+    for layer in spec.layers:
+        kind = layer[0]
+        if kind == "conv":
+            _, c_out, k, stride = layer
+            c_out = max(4, int(c_out * width_mult))
+            hw_out = -(-hw // stride)
+            m = hw_out * hw_out * k * k * c_in * c_out
+            macs += m
+            n_params += k * k * c_in * c_out + c_out
+            n_neurons += hw_out * hw_out * c_out
+            per_layer.append({
+                "kind": "conv", "macs": m, "k": k,
+                "c_in": c_in, "c_out": c_out, "hw": hw_out, "stride": stride,
+            })
+            c_in, hw = c_out, hw_out
+        elif kind == "maxpool":
+            _, k, stride = layer
+            hw = -(-hw // stride)
+            per_layer.append({"kind": "maxpool", "macs": 0})
+        elif kind == "residual":
+            per_layer.append({"kind": "residual", "macs": 0})
+        elif kind == "globalpool":
+            flat_dim = c_in
+            hw = 1
+            per_layer.append({"kind": "globalpool", "macs": 0})
+        elif kind == "fc":
+            _, n_out = layer
+            n_out = max(4, int(n_out * width_mult))
+            d_in = flat_dim if flat_dim is not None else c_in * hw * hw
+            m = d_in * n_out
+            macs += m
+            n_params += d_in * n_out + n_out
+            n_neurons += n_out
+            per_layer.append({"kind": "fc", "macs": m,
+                              "c_in": d_in, "c_out": n_out})
+            flat_dim = n_out
+            c_in = n_out
+    n_layers = sum(1 for l in spec.layers if l[0] in ("conv", "fc", "residual"))
+    return {
+        "name": spec.name,
+        "macs": macs,
+        "params": n_params,
+        "neurons": n_neurons,
+        "weights_and_neurons": n_params + n_neurons,
+        "layers": n_layers,
+        "per_layer": per_layer,
+    }

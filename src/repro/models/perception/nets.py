@@ -1,0 +1,162 @@
+"""The paper's three perception workloads: YOLO-class, SSD-class, GOTURN-class.
+
+Full-scale specs are calibrated so the analytic MACs approximate Table 1
+(YOLO 16 GMACs, SSD 26 GMACs, GOTURN 11 GMACs); the Table-1 benchmark prints
+derived-vs-paper numbers.  Reduced configs (width_mult < 1) power CPU smoke
+tests and the TPU virtual-platform serving example.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.perception.cnn import (
+    ConvNetSpec, convnet_apply, convnet_stats, init_convnet)
+
+
+def _darknet_stage(c: int, n_blocks: int):
+    layers = [("conv", c, 3, 2)]
+    for _ in range(n_blocks):
+        layers += [("conv", c // 2, 1, 1), ("conv", c, 3, 1), ("residual", 3)]
+    return layers
+
+
+# YOLO-class detector: DarkNet-53-style backbone + detection head.
+# width 0.72 -> ~16 GMACs at 416x416 (Table 1: 16G).
+YOLO_WIDTH = 0.80
+YOLO_SPEC = ConvNetSpec(
+    name="yolo",
+    in_channels=3,
+    input_hw=416,
+    layers=tuple(
+        [("conv", 32, 3, 1)]
+        + _darknet_stage(64, 1)
+        + _darknet_stage(128, 2)
+        + _darknet_stage(256, 8)
+        + _darknet_stage(512, 8)
+        + _darknet_stage(1024, 4)
+        + [("conv", 512, 1, 1), ("conv", 1024, 3, 1), ("conv", 125, 1, 1)]
+    ),
+)
+
+
+def _resnet_stage(c: int, n_blocks: int, stride: int):
+    layers = [("conv", c, 3, stride)]  # stage entry (projection + downsample)
+    for _ in range(n_blocks):
+        layers += [("conv", c // 4, 1, 1), ("conv", c // 4, 3, 1),
+                   ("conv", c, 1, 1), ("residual", 4)]
+    return layers
+
+
+# SSD-class detector: ResNet-50-style backbone at 512x512 + multiscale heads.
+# width 0.78 -> ~26 GMACs (Table 1: 26G).
+SSD_WIDTH = 0.85
+SSD_SPEC = ConvNetSpec(
+    name="ssd",
+    in_channels=3,
+    input_hw=512,
+    layers=tuple(
+        [("conv", 64, 7, 2), ("maxpool", 3, 2)]
+        + _resnet_stage(256, 3, 1)
+        + _resnet_stage(512, 4, 2)
+        + _resnet_stage(1024, 6, 2)
+        + _resnet_stage(2048, 3, 2)
+        # extra SSD feature layers + class/box head convs
+        + [("conv", 512, 1, 1), ("conv", 512, 3, 2),
+           ("conv", 256, 1, 1), ("conv", 256, 3, 2),
+           ("conv", 486, 3, 1)]
+    ),
+)
+
+
+# GOTURN-class tracker: AlexNet-style twin towers + FC regression head.
+# width 1.9 -> ~11 GMACs for the two towers + head (Table 1: 11G).
+GOTURN_WIDTH = 2.1
+GOTURN_TOWER = ConvNetSpec(
+    name="goturn_tower",
+    in_channels=3,
+    input_hw=227,
+    layers=(
+        ("conv", 96, 11, 4), ("maxpool", 3, 2),
+        ("conv", 256, 5, 1), ("maxpool", 3, 2),
+        ("conv", 384, 3, 1),
+        ("conv", 384, 3, 1),
+        ("conv", 256, 3, 1), ("maxpool", 3, 2),
+        ("globalpool",),
+    ),
+)
+GOTURN_HEAD = ConvNetSpec(
+    name="goturn_head",
+    in_channels=512,  # concat of two tower outputs (pre width_mult)
+    input_hw=1,
+    layers=(("fc", 4096), ("fc", 4096), ("fc", 4)),
+)
+GOTURN_SPEC = GOTURN_TOWER  # stats helper below combines tower+head
+
+
+def init_yolo(key, width_mult: float = YOLO_WIDTH, dtype=jnp.float32):
+    return init_convnet(key, YOLO_SPEC, width_mult, dtype)
+
+
+def yolo_apply(params, x, width_mult: float = YOLO_WIDTH):
+    del width_mult
+    return convnet_apply(params, YOLO_SPEC, x)
+
+
+def init_ssd(key, width_mult: float = SSD_WIDTH, dtype=jnp.float32):
+    return init_convnet(key, SSD_SPEC, width_mult, dtype)
+
+
+def ssd_apply(params, x, width_mult: float = SSD_WIDTH):
+    del width_mult
+    return convnet_apply(params, SSD_SPEC, x)
+
+
+def init_goturn(key, width_mult: float = GOTURN_WIDTH, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    tower = init_convnet(k1, GOTURN_TOWER, width_mult, dtype)
+    # head input = 2 towers of (256 * width) channels
+    c = 2 * max(4, int(256 * width_mult))
+    head_spec = ConvNetSpec(name="goturn_head", in_channels=c, input_hw=1,
+                            layers=GOTURN_HEAD.layers)
+    head = init_convnet(k2, head_spec, 1.0, dtype)
+    return {"tower": tower, "head": head, "head_spec": head_spec}
+
+
+def goturn_apply(params, prev_crop, curr_crop):
+    f1 = convnet_apply(params["tower"], GOTURN_TOWER, prev_crop)
+    f2 = convnet_apply(params["tower"], GOTURN_TOWER, curr_crop)
+    feats = jnp.concatenate([f1, f2], axis=-1)
+    return convnet_apply(params["head"], params["head_spec"], feats)
+
+
+def goturn_stats(width_mult: float = GOTURN_WIDTH) -> dict:
+    tower = convnet_stats(GOTURN_TOWER, width_mult)
+    c = 2 * max(4, int(256 * width_mult))
+    head_spec = ConvNetSpec(name="goturn_head", in_channels=c, input_hw=1,
+                            layers=GOTURN_HEAD.layers)
+    head = convnet_stats(head_spec, 1.0)
+    return {
+        "name": "goturn",
+        "macs": 2 * tower["macs"] + head["macs"],
+        "params": tower["params"] + head["params"],
+        "weights_and_neurons": (tower["weights_and_neurons"] * 2
+                                + head["weights_and_neurons"]),
+        "layers": tower["layers"] + head["layers"],
+        "per_layer": tower["per_layer"] + head["per_layer"],
+    }
+
+
+PERCEPTION_SPECS = {
+    "yolo": (YOLO_SPEC, YOLO_WIDTH),
+    "ssd": (SSD_SPEC, SSD_WIDTH),
+    "goturn": (GOTURN_TOWER, GOTURN_WIDTH),
+}
+
+
+def perception_stats() -> dict:
+    return {
+        "yolo": convnet_stats(YOLO_SPEC, YOLO_WIDTH),
+        "ssd": convnet_stats(SSD_SPEC, SSD_WIDTH),
+        "goturn": goturn_stats(),
+    }

@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+Chunked matmul formulation for train/prefill (scan over chunks carries the
+inter-chunk state), O(1)-state single-token decode for serving.  Heads shard
+over the "model" mesh axis; B/C projections (ngroups=1) are replicated.
+
+State per layer: conv ring buffer [B, W-1, d_conv] + SSD state [B, H, P, N].
+This is why the ``long_500k`` cell is runnable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import with_logical_constraint as wlc
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # [B, W-1, d_inner + 2*N]
+    ssd: jax.Array   # [B, H, P, N] fp32
+
+
+def init_mamba(key, cfg: ModelConfig, param_dtype) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    keys = jax.random.split(key, 8)
+    # dt bias init: softplus^{-1}(dt) for dt ~ U[1e-3, 1e-1] — use mid value
+    dt_init = jnp.log(jnp.expm1(jnp.full((h,), 0.01, dtype=jnp.float32)))
+    return {
+        "wz": L.dense_init(keys[0], (d, di), ("embed", "mlp"), param_dtype, fan_in=d),
+        "wx": L.dense_init(keys[1], (d, di), ("embed", "mlp"), param_dtype, fan_in=d),
+        "wB": L.dense_init(keys[2], (d, n), ("embed", "ssm_state"), param_dtype, fan_in=d),
+        "wC": L.dense_init(keys[3], (d, n), ("embed", "ssm_state"), param_dtype, fan_in=d),
+        "wdt": L.dense_init(keys[4], (d, h), ("embed", "ssm_heads"), param_dtype, fan_in=d),
+        "conv_w": L.dense_init(keys[5], (w, di + 2 * n), ("conv_kernel", "mlp"),
+                               param_dtype, fan_in=w, scale=1.0),
+        "conv_b": L.zeros_init((di + 2 * n,), ("mlp",), param_dtype),
+        "A_log": L.const_init(jnp.log(jnp.linspace(1.0, 16.0, h)).astype(param_dtype),
+                              ("ssm_heads",)),
+        "dt_bias": L.const_init(dt_init.astype(param_dtype), ("ssm_heads",)),
+        "D": L.ones_init((h,), ("ssm_heads",), param_dtype),
+        "norm": L.ones_init((di,), ("mlp",), param_dtype),
+        "wo": L.dense_init(keys[6], (di, d), ("mlp", "embed"), param_dtype, fan_in=di),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv via shifted adds. xbc [B, S, C]; w [W, C]."""
+    width = w.shape[0]
+    if history is None:
+        padded = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([history.astype(xbc.dtype), xbc], axis=1)
+    s = xbc.shape[1]
+    out = jnp.zeros_like(xbc) + b.astype(xbc.dtype)
+    for i in range(width):
+        out = out + padded[:, i : i + s, :] * w[i].astype(xbc.dtype)
+    return jax.nn.silu(out)
+
+
+def _segsum_exp(a_cum: jax.Array) -> jax.Array:
+    """L[..., i, j] = exp(a_cum[..., i] - a_cum[..., j]) masked to i >= j.
+
+    a_cum: [..., Q]. Returns [..., Q, Q].
+    """
+    q = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    # iota-based mask (never a materialized q*q constant at compile time)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    return jnp.where(rows >= cols, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(u: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, init_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    u  [B, S, H, P]   discretized inputs (x * dt)
+    a  [B, S, H]      log-decay per step (dt * A, negative)
+    Bm [B, S, N], Cm [B, S, N]  input/output projections (shared over heads)
+
+    Returns y [B, S, H, P] and final state [B, H, P, N].
+    """
+    b, s, h, p = u.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    uf = u.astype(jnp.float32).reshape(b, nc, q, h, p)
+    af = a.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, q, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, q, n)
+
+    a_cum = jnp.cumsum(af, axis=2)  # [b, nc, q, h]
+
+    # ---- intra-chunk (diagonal blocks) ----
+    scores = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)          # [b,nc,q,q]
+    Lmask = _segsum_exp(a_cum.transpose(0, 1, 3, 2))         # [b,nc,h,q,q]
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, Lmask, uf)
+
+    # ---- chunk summary states ----
+    decay_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)         # [b,nc,q,h]
+    S_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bf, decay_end, uf)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                # [b,nc,h]
+
+    # ---- inter-chunk recurrence (scan over chunks) ----
+    def step(S_prev, inp):
+        S_c, dec = inp  # [b,h,p,n], [b,h]
+        S_new = S_c + dec[:, :, None, None] * S_prev
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((b, h, p, n), dtype=jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    S_final, S_prevs = jax.lax.scan(
+        step, S0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # [b,nc,h,p,n]
+
+    # ---- off-diagonal contribution ----
+    in_decay = jnp.exp(a_cum)  # [b,nc,q,h]
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cf, in_decay, S_prevs)
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(u.dtype), S_final
+
+
+def mamba_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+                return_state: bool = False):
+    """x [B,S,E] -> [B,S,E] (+ final SSMState for prefill->decode handoff)."""
+    dt_ = x.dtype
+    b, s, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bse,ei->bsi", x, p["wz"].astype(dt_))
+    xs = jnp.einsum("bse,ei->bsi", x, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bse,en->bsn", x, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bse,en->bsn", x, p["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bse,eh->bsh", x, p["wdt"].astype(dt_))
+
+    xbc_pre = jnp.concatenate([xs, Bm, Cm], axis=-1)  # conv INPUT (cached)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+    xs = wlc(xs, ("batch", None, "mlp"))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+    a = dt * A  # log-decay
+    u = xs.reshape(b, s, h, pdim) * dt[..., None].astype(dt_)
+
+    y, S_final = ssd_chunked(u, a, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs.reshape(b, s, h, pdim) * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = wlc(y, ("batch", None, "mlp"))
+    out = jnp.einsum("bsi,ie->bse", y, p["wo"].astype(dt_))
+    out = wlc(out, ("batch", None, None))
+    if return_state:
+        width = cfg.ssm_conv_width
+        if s >= width - 1:
+            conv_hist = xbc_pre[:, s - (width - 1):, :]
+        else:
+            conv_hist = jnp.pad(xbc_pre, ((0, 0), (width - 1 - s, 0), (0, 0)))
+        return out, SSMState(conv=conv_hist, ssd=S_final)
+    return out
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: SSMState):
+    """Single-token decode. x [B,1,E]; returns (y [B,1,E], new state)."""
+    dt_ = x.dtype
+    b = x.shape[0]
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads, cfg.ssm_head_dim
+    width = cfg.ssm_conv_width
+
+    z = jnp.einsum("bse,ei->bsi", x, p["wz"].astype(dt_))
+    xs = jnp.einsum("bse,ei->bsi", x, p["wx"].astype(dt_))
+    Bm = jnp.einsum("bse,en->bsn", x, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bse,en->bsn", x, p["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bse,eh->bsh", x, p["wdt"].astype(dt_))
+
+    xbc_new = jnp.concatenate([xs, Bm, Cm], axis=-1)  # [B,1,C]
+    window = jnp.concatenate([state.conv.astype(dt_), xbc_new], axis=1)  # [B,W,C]
+    conv_out = jnp.einsum("bwc,wc->bc", window,
+                          p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]  # [B,1,C]
+    new_conv = window[:, 1:, :]
+
+    xs, Bm, Cm = (conv_out[..., :di], conv_out[..., di : di + n],
+                  conv_out[..., di + n :])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)  # [B,H]
+    u = (xs.reshape(b, h, pdim) * dt[..., None].astype(dt_)).astype(jnp.float32)
+
+    S_new = (decay[:, :, None, None] * state.ssd.astype(jnp.float32)
+             + jnp.einsum("bhp,bn->bhpn", u, Bm[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), S_new)
+    y = y.astype(dt_) + xs.reshape(b, h, pdim) * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsi,ie->bse", y, p["wo"].astype(dt_))
+    return out, SSMState(conv=new_conv, ssd=S_new)

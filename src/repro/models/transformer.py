@@ -1,0 +1,392 @@
+"""Decoder-only LM substrate: composable blocks, scan-over-layers, caches.
+
+Layer heterogeneity (hybrid attn/Mamba patterns, periodic MoE) is handled by
+grouping layers into *super-blocks*: the model is a ``lax.scan`` over
+``num_layers / period`` steps whose body applies the ``period`` distinct
+sub-layers.  HLO size is proportional to one super-block regardless of depth,
+which keeps 88-layer dry-run compiles tractable.
+
+Params are boxed (:class:`repro.sharding.Param`) with logical axes; stacked
+sub-layer params gain a leading "layers" axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.sharding import Param, is_param, with_logical_constraint as wlc
+
+
+# ---------------------------------------------------------------------------
+# Super-block structure
+# ---------------------------------------------------------------------------
+
+class BlockSpec(NamedTuple):
+    kind: str      # "A" | "M"
+    is_moe: bool
+    has_ffn: bool
+
+
+def superblock_period(cfg: ModelConfig) -> int:
+    pat = 1 if cfg.layer_pattern is None else len(cfg.layer_pattern)
+    moe = cfg.moe_layer_period if cfg.num_experts else 1
+    period = _lcm(pat, moe)
+    if cfg.num_layers % period:
+        return cfg.num_layers  # no clean repeat: one unrolled super-block
+    return period
+
+
+def _lcm(a, b):
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def block_specs(cfg: ModelConfig) -> list[BlockSpec]:
+    """Specs for the sub-layers of one super-block (length == period)."""
+    period = superblock_period(cfg)
+    pattern = cfg.pattern
+    return [
+        BlockSpec(
+            kind=pattern[i],
+            is_moe=cfg.is_moe_layer(i),
+            has_ffn=cfg.d_ff > 0,
+        )
+        for i in range(period)
+    ]
+
+
+def stack_init(init_fn, key, n: int):
+    """vmap an init over n keys and prepend the "layers" logical axis."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree_util.tree_map(
+        lambda p: Param(p.value, ("layers",) + p.axes),
+        stacked, is_leaf=is_param)
+
+
+def _slice_layer(tree, i):
+    """Take layer i of a "layers"-stacked (unboxed) tree."""
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, spec: BlockSpec) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p: dict = {"norm1": L.init_rmsnorm(cfg.d_model, pdt)}
+    if spec.kind == "A":
+        p["attn"] = A.init_attention(k1, cfg, pdt)
+    else:
+        p["mamba"] = S.init_mamba(k1, cfg, pdt)
+    if spec.has_ffn:
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, pdt)
+        if spec.is_moe:
+            p["moe"] = M.init_moe(k2, cfg, pdt)
+        else:
+            p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, pdt)
+    return p
+
+
+def _attn_window(cfg: ModelConfig) -> Optional[int]:
+    if cfg.family == "hybrid":
+        return cfg.hybrid_attn_window
+    return cfg.sliding_window
+
+
+def block_apply(p: dict, cfg: ModelConfig, spec: BlockSpec, x, positions,
+                causal: bool = True):
+    """One sub-layer (mixer + optional FFN). Returns (x, aux_loss)."""
+    aux = jnp.zeros((), dtype=jnp.float32)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "A":
+        if cfg.attention_kind == "mla":
+            mix = A.mla_apply(p["attn"], cfg, h, positions, causal=causal)
+        else:
+            mix = A.gqa_apply(p["attn"], cfg, h, positions, causal=causal,
+                              window=_attn_window(cfg))
+    else:
+        mix = S.mamba_apply(p["mamba"], cfg, h)
+    x = x + mix
+    if spec.has_ffn:
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if spec.is_moe:
+            ffn, aux = M.moe_apply(p["moe"], cfg, h2)
+        else:
+            ffn = L.mlp_apply(p["mlp"], h2)
+        x = x + ffn
+    x = _residual_constraint(x)
+    return x, aux
+
+
+def _residual_constraint(x):
+    # sequence-parallel residual stream: saved scan carries shard over "model"
+    return wlc(x, ("batch", "seq", None))
+
+
+def block_apply_cached(p: dict, cfg: ModelConfig, spec: BlockSpec, x, cache,
+                       pos):
+    """Decode step for one sub-layer against its cache entry."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "A":
+        if cfg.attention_kind == "mla":
+            mix, new_cache = A.mla_decode(p["attn"], cfg, h, cache, pos)
+        else:
+            mix, new_cache = A.gqa_decode(p["attn"], cfg, h, cache, pos,
+                                          window=_attn_window(cfg))
+    else:
+        mix, new_cache = S.mamba_decode(p["mamba"], cfg, h, cache)
+    x = x + mix
+    if spec.has_ffn:
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if spec.is_moe:
+            ffn, _ = M.moe_apply(p["moe"], cfg, h2)
+        else:
+            ffn = L.mlp_apply(p["mlp"], h2)
+        x = x + ffn
+    return x, new_cache
+
+
+def block_apply_prefill(p: dict, cfg: ModelConfig, spec: BlockSpec, x,
+                        positions):
+    """Forward + cache construction (prefill). Returns (x, cache_entry)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.kind == "A":
+        if cfg.attention_kind == "mla":
+            mix, entry = A.mla_apply(p["attn"], cfg, h, positions,
+                                     causal=True, return_cache=True)
+        else:
+            mix, entry = A.gqa_apply(p["attn"], cfg, h, positions, causal=True,
+                                     window=_attn_window(cfg),
+                                     return_cache=True)
+    else:
+        mix, entry = S.mamba_apply(p["mamba"], cfg, h, return_state=True)
+    x = x + mix
+    if spec.has_ffn:
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if spec.is_moe:
+            ffn, _ = M.moe_apply(p["moe"], cfg, h2)
+        else:
+            ffn = L.mlp_apply(p["mlp"], h2)
+        x = x + ffn
+    x = _residual_constraint(x)
+    return x, entry
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    specs = block_specs(cfg)
+    n_super = cfg.num_layers // len(specs)
+    keys = jax.random.split(key, len(specs) + 3)
+    params: dict = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, pdt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(
+            keys[1], (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), pdt,
+            scale=1.0 / (cfg.d_model ** 0.5))
+    blocks = {}
+    for i, spec in enumerate(specs):
+        blocks[f"pos{i}"] = stack_init(
+            lambda k, s=spec: init_block(k, cfg, s), keys[2 + i], n_super)
+    params["blocks"] = blocks
+    if cfg.frontend == "vision_stub" or cfg.frontend == "audio_stub":
+        params["projector"] = L.init_mlp(
+            keys[-1], cfg.d_model, cfg.d_model * 2, pdt)
+    return params
+
+
+def _scan_blocks(params, cfg: ModelConfig, x, positions, causal=True):
+    """Apply all layers via scan over super-blocks. Returns (x, aux_total)."""
+    specs = block_specs(cfg)
+    n_super = cfg.num_layers // len(specs)
+
+    def body(carry, layer_params):
+        x, aux = carry
+        for i, spec in enumerate(specs):
+            x, a = block_apply(layer_params[f"pos{i}"], cfg, spec, x,
+                               positions, causal=causal)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.scan_layers and n_super > 1:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(n_super):
+            (x, aux), _ = body((x, aux), _slice_layer(params["blocks"], j))
+    return x, aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict):
+    """batch: tokens [B,S] int32, labels [B,S] int32, loss_mask [B,S].
+
+    VLM/audio stubs: batch additionally carries "frontend_embeds"
+    [B, T_front, d_model*? ] which are projected and prepended; labels then
+    cover only the token region (mask supplied by the pipeline).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, dt)
+    if cfg.frontend is not None:
+        fe = batch["frontend_embeds"].astype(dt)
+        fe = L.mlp_apply(params["projector"], fe)
+        x = jnp.concatenate([fe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _residual_constraint(x)
+    x, aux = _scan_blocks(params, cfg, x, positions)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.frontend is not None:
+        x = x[:, -tokens.shape[1]:, :]
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed_logits(table, x, jnp.dtype(cfg.logits_dtype))
+    loss = L.softmax_cross_entropy(
+        logits, batch["labels"], batch.get("loss_mask"))
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def lm_prefill(params, cfg: ModelConfig, batch: dict):
+    """Forward pass building the KV cache. Returns (last_logits, cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens, dt)
+    if cfg.frontend is not None:
+        fe = batch["frontend_embeds"].astype(dt)
+        fe = L.mlp_apply(params["projector"], fe)
+        x = jnp.concatenate([fe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    specs = block_specs(cfg)
+    n_super = cfg.num_layers // len(specs)
+
+    def body(x, layer_params):
+        entries = {}
+        for i, spec in enumerate(specs):
+            x, entry = block_apply_prefill(
+                layer_params[f"pos{i}"], cfg, spec, x, positions)
+            entries[f"pos{i}"] = entry
+        return x, entries
+
+    if cfg.scan_layers and n_super > 1:
+        x, cache = jax.lax.scan(body, x, params["blocks"])
+    else:
+        caches = []
+        for j in range(n_super):
+            x, entries = body(x, _slice_layer(params["blocks"], j))
+            caches.append(entries)
+        cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed_logits(table, x[:, -1:, :], jnp.dtype(cfg.logits_dtype))
+    return logits, cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """One decode step. token [B,1] int32; pos scalar int32.
+
+    cache: {"pos{i}": stacked entry [n_super, ...]} as produced by
+    lm_prefill / init_cache.  Returns (logits [B,1,V], new cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed_lookup(params["embed"], token, dt)
+    specs = block_specs(cfg)
+    n_super = cfg.num_layers // len(specs)
+
+    def body(x, scanned):
+        layer_params, cache_slice = scanned
+        new_entries = {}
+        for i, spec in enumerate(specs):
+            x, entry = block_apply_cached(
+                layer_params[f"pos{i}"], cfg, spec, x,
+                cache_slice[f"pos{i}"], pos)
+            new_entries[f"pos{i}"] = entry
+        return x, new_entries
+
+    if cfg.scan_layers and n_super > 1:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        entries_list = []
+        for j in range(n_super):
+            x, entries = body(
+                x, (_slice_layer(params["blocks"], j), _slice_layer(cache, j)))
+            entries_list.append(entries)
+        new_cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *entries_list)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed_logits(table, x, jnp.dtype(cfg.logits_dtype))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (boxed, for dry-run specs and serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, seq_len: int):
+    """Zero-initialized boxed cache tree for decode.
+
+    Attention layers get [n_super, B, S_kv, K, D] KV entries (S_kv bounded
+    by the sliding window for SWA archs); Mamba layers get SSM states.
+    MLA caches the latent + rope-key instead.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    specs = block_specs(cfg)
+    n_super = cfg.num_layers // len(specs)
+    window = _attn_window(cfg)
+    s_kv = seq_len if window is None else min(seq_len, window)
+    cache = {}
+    for i, spec in enumerate(specs):
+        if spec.kind == "A":
+            if cfg.attention_kind == "mla":
+                entry = A.KVCacheEntry(
+                    k=Param(jnp.zeros((n_super, batch_size, s_kv,
+                                       cfg.kv_lora_rank), dt),
+                            ("layers", "cache_batch", "kv_seq", "lora")),
+                    v=Param(jnp.zeros((n_super, batch_size, s_kv,
+                                       cfg.qk_rope_dim), dt),
+                            ("layers", "cache_batch", "kv_seq", "lora")),
+                )
+            else:
+                shape = (n_super, batch_size, s_kv, cfg.num_kv_heads,
+                         cfg.head_dim)
+                axes = ("layers", "cache_batch", "kv_seq", "kv_heads", "head_dim")
+                entry = A.KVCacheEntry(
+                    k=Param(jnp.zeros(shape, dt), axes),
+                    v=Param(jnp.zeros(shape, dt), axes),
+                )
+        else:
+            entry = S.SSMState(
+                conv=Param(
+                    jnp.zeros((n_super, batch_size, cfg.ssm_conv_width - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state_dim), dt),
+                    ("layers", "cache_batch", None, "mlp")),
+                ssd=Param(
+                    jnp.zeros((n_super, batch_size, cfg.ssm_heads,
+                               cfg.ssm_head_dim, cfg.ssm_state_dim),
+                              jnp.float32),
+                    ("layers", "cache_batch", "ssm_heads", None, "ssm_state")),
+            )
+        cache[f"pos{i}"] = entry
+    return cache

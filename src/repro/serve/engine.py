@@ -1,0 +1,169 @@
+"""Serving: jit-able decode/prefill steps + a batched continuous-batching
+engine.
+
+``make_serve_step`` is what the decode-shape dry-run cells lower: one new
+token against a KV cache of the cell's sequence length, cache donated so the
+update is in-place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelAPI
+
+
+def make_serve_step(api: ModelAPI, greedy: bool = True):
+    """(params, cache, token [B,1], pos scalar) -> (next_token, logits, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = api.decode_step(params, cache, token, pos)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(api: ModelAPI):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch)
+
+    return prefill_step
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 1.0,
+                 top_k: int = 0):
+    """logits [B, V] -> tokens [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Wave-based batched serving with a static decode shape.
+
+    Requests are admitted in waves of ``slots``: a wave's prompts are padded
+    to a common length, batch-prefilled once, then decoded in lockstep until
+    every request in the wave finishes (per-request EOS/max handled with a
+    done mask).  The decode step keeps a single static (batch, cache) shape —
+    the property the compiled/sharded step needs on real hardware.  When a
+    wave drains, the next wave is admitted (continuous batching at wave
+    granularity).
+    """
+
+    def __init__(self, api: ModelAPI, params, *, slots: int, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 pad_token: int = 0):
+        self.api = api
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.pad_token = pad_token
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._decode = jax.jit(api.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(api.prefill)
+        self.steps_executed = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _merge_cache(self, prefill_cache):
+        """Embed the prefill-length cache into a max_seq-length zero cache.
+
+        KV entries get written at sequence offset 0 (positions 0..plen-1);
+        SSM states match shape exactly and pass through.
+        """
+        from repro.sharding import unbox
+        zero = unbox(self.api.init_cache(self.slots, self.max_seq))
+
+        def merge(z, p):
+            if z.shape == p.shape:
+                return p.astype(z.dtype)
+            # KV entries: [..., S, ...] differ only in the seq dim (axis 2)
+            if (z.ndim == p.ndim and z.shape[:2] == p.shape[:2]
+                    and z.shape[3:] == p.shape[3:]
+                    and p.shape[2] <= z.shape[2]):
+                return jax.lax.dynamic_update_slice(
+                    z, p.astype(z.dtype), (0,) * z.ndim)
+            raise ValueError(f"cache merge mismatch: {z.shape} vs {p.shape}")
+
+        return jax.tree_util.tree_map(merge, zero, prefill_cache)
+
+    def _next_wave(self) -> list[Request]:
+        wave = self.queue[: self.slots]
+        del self.queue[: len(wave)]
+        while len(wave) < self.slots:  # pad the wave with dummy requests
+            wave.append(Request(uid=-1, prompt=np.array([self.pad_token],
+                                                        np.int32),
+                                max_new_tokens=0, done=True))
+        return wave
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        plen = max(len(r.prompt) for r in wave)
+        prompts = np.full((self.slots, plen), self.pad_token, np.int32)
+        for i, r in enumerate(wave):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(prompts)}
+        if self.api.cfg.frontend is not None:
+            t = max(1, self.api.cfg.num_frontend_tokens)
+            batch["frontend_embeds"] = jnp.zeros(
+                (self.slots, t, self.api.cfg.d_model), jnp.float32)
+        logits, prefill_cache = self._prefill(self.params, batch)
+        cache = self._merge_cache(prefill_cache)
+        self.key, sub = jax.random.split(self.key)
+        tok = np.asarray(sample_token(logits[:, -1, :], sub,
+                                      self.temperature))[:, None]
+        pos = plen
+        max_new = max((r.max_new_tokens for r in wave), default=0)
+        for i, r in enumerate(wave):
+            if not r.done and r.max_new_tokens > 0:
+                r.generated.append(int(tok[i, 0]))
+        for _ in range(max_new - 1):
+            if pos >= self.max_seq - 1:
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(tok), jnp.int32(pos))
+            self.steps_executed += 1
+            self.key, sub = jax.random.split(self.key)
+            tok = np.asarray(sample_token(logits[:, -1, :], sub,
+                                          self.temperature))[:, None]
+            pos += 1
+            for i, r in enumerate(wave):
+                if not r.done and len(r.generated) < r.max_new_tokens:
+                    r.generated.append(int(tok[i, 0]))
+                if len(r.generated) >= r.max_new_tokens:
+                    r.done = True
+        for r in wave:
+            r.done = True
+            if r.uid >= 0:
+                self.finished.append(r)
+
+    def run_until_done(self, max_waves: int = 1000) -> None:
+        for _ in range(max_waves):
+            if not self.queue:
+                return
+            self._run_wave(self._next_wave())

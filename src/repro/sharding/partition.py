@@ -1,0 +1,264 @@
+"""Logical-axis parameter partitioning.
+
+Every parameter in the framework is created as a :class:`Param` box carrying
+both its value (a ``jax.Array`` — or a ``ShapeDtypeStruct`` under
+``jax.eval_shape``) and a tuple of *logical axis names* (one per dim).  A rule
+table maps logical names onto physical mesh axes; changing the rule table is
+how sharding experiments (§Perf hillclimbs) are done, without touching model
+code.
+
+Logical axis vocabulary used across the model zoo:
+
+    "batch"      activation batch                  -> ("pod", "data")
+    "seq"        activation sequence (SP regions)  -> "model"
+    "embed"      residual-stream / d_model dim     -> "data"   (FSDP shard)
+    "vocab"      embedding-table vocabulary        -> "model"
+    "heads"      query heads                       -> "model"  (TP)
+    "kv_heads"   KV heads (may be < TP degree)     -> None     (replicated)
+    "head_dim"   per-head dim                      -> None
+    "mlp"        FFN hidden dim                    -> "model"  (TP)
+    "expert"     MoE expert dim                    -> "model"  (EP)
+    "layers"     stacked scan-over-layers dim      -> None
+    "kv_seq"     KV-cache sequence dim (decode)    -> "model"  (flash-decoding)
+    "ssm_state"  SSM state dim                     -> None
+    "ssm_heads"  SSD heads                         -> "model"
+    "lora"       MLA latent / low-rank dims        -> None
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter value boxed with its logical axis names.
+
+    ``axes`` is pytree *metadata*, so ``jax.eval_shape`` /
+    ``jax.tree_util.tree_map`` over boxed trees treat only ``value`` as a
+    leaf.  ``len(axes)`` must equal ``value.ndim``.
+    """
+
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree):
+    """Boxed param tree -> plain value tree (same structure minus boxes).
+
+    Non-Param leaves pass through unchanged, so mixed trees are fine.
+    """
+    return jax.tree_util.tree_map(
+        lambda p: p.value if is_param(p) else p, tree, is_leaf=is_param)
+
+
+def boxed_axes(tree):
+    """Boxed param tree -> tree of logical-axes tuples (leaves are tuples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_param)
+    return jax.tree_util.tree_unflatten(
+        treedef, [p.axes if is_param(p) else None for p in leaves]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+# Each logical axis maps to a mesh axis name, a tuple of mesh axis names, or
+# None (replicated).  First matching rule wins.
+AxisRules = tuple  # tuple[tuple[str, str | tuple | None], ...]
+
+DEFAULT_RULES: AxisRules = (
+    ("batch", ("pod", "data")),
+    ("cache_batch", ("pod", "data")),  # KV-cache batch dim (decode)
+    ("seq", "model"),
+    ("embed", "data"),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", None),
+    ("head_dim", None),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("expert_cap", "data"),  # MoE dispatch-buffer capacity dim (2D EP)
+    ("expert_mlp", None),
+    ("layers", None),
+    ("kv_seq", "model"),
+    ("ssm_state", None),
+    ("ssm_heads", "model"),
+    ("lora", None),
+    ("conv_kernel", None),
+    ("unsharded", None),
+)
+
+# Decode-time rules (§Perf, decode cells).  The training layout FSDP-shards
+# weights along the *contraction* (embed) dim over "data", which at decode
+# forces an fp32 weight all-gather per matmul per token (84 MB/matmul for
+# mistral-large in the baseline HLO).  For decode we instead 2D-shard every
+# weight along NON-embed dims — (heads|mlp) x (head_dim|data-split of mlp) —
+# so each matmul is local-partial + an activation-sized all-reduce
+# (O(100 KB)), the textbook 2D-TP serving layout.  Activations replicate
+# over "data"; the KV cache keeps its own distributed batch sharding
+# ("cache_batch").
+_DECODE_OVERRIDES = {
+    "batch": ("pod",),
+    "embed": None,            # never shard the contraction dim of weights
+    "mlp": ("model", "data"),
+    "expert_mlp": "data",
+    "head_dim": "data",
+    "seq": None,
+}
+DECODE_RULES: AxisRules = tuple(
+    (name, _DECODE_OVERRIDES.get(name, target))
+    if name in _DECODE_OVERRIDES else (name, target)
+    for name, target in DEFAULT_RULES
+)
+
+
+def _rules_dict(rules: AxisRules) -> dict:
+    return dict(rules)
+
+
+def logical_to_mesh_axes(
+    axes: Sequence[str | None], rules: AxisRules, mesh: Mesh
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    Mesh axes not present in ``mesh`` are dropped (so one rule table works
+    for both the single-pod and multi-pod meshes).  A mesh axis may be used
+    at most once in a spec; later logical dims asking for an already-used
+    mesh axis are left replicated.
+    """
+    table = _rules_dict(rules)
+    used: set = set()
+    spec = []
+    for name in axes:
+        if name is None:
+            spec.append(None)
+            continue
+        if name not in table:
+            raise ValueError(f"no partition rule for logical axis {name!r}")
+        target = table[name]
+        if target is None:
+            spec.append(None)
+            continue
+        targets = target if isinstance(target, tuple) else (target,)
+        avail = tuple(
+            t for t in targets if t in mesh.axis_names and t not in used
+        )
+        if not avail:
+            spec.append(None)
+            continue
+        used.update(avail)
+        spec.append(avail if len(avail) > 1 else avail[0])
+    return P(*spec)
+
+
+def named_sharding(
+    axes: Sequence[str | None], mesh: Mesh, rules: AxisRules = DEFAULT_RULES
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_mesh_axes(axes, rules, mesh))
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide a dim (avoids padded/uneven
+    shardings in the dry-run, which inflate memory)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        if total and dim % total == 0:
+            out.append(entry)
+        else:
+            # try a prefix of the axes that still divides
+            kept = []
+            prod = 1
+            for n in names:
+                if dim % (prod * mesh.shape[n]) == 0:
+                    kept.append(n)
+                    prod *= mesh.shape[n]
+            out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def tree_shardings(boxed_tree, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Boxed param tree -> tree of NamedShardings (same structure)."""
+
+    def one(p: Param):
+        spec = logical_to_mesh_axes(p.axes, rules, mesh)
+        spec = _divisible(p.value.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, boxed_tree, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh/rules context (set by the launcher; no-op in plain tests)
+# ---------------------------------------------------------------------------
+
+import contextlib
+import contextvars
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Install ``mesh`` + ``rules`` as the ambient partitioning context.
+
+    Also enters the legacy mesh context manager so bare-PartitionSpec
+    sharding constraints resolve inside ``jit``.
+    """
+    token = _CTX.set((mesh, rules))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh_and_rules():
+    return _CTX.get()
+
+
+def with_logical_constraint(x: jax.Array, axes: Sequence[str | None], rules=None):
+    """``with_sharding_constraint`` by logical axis names.
+
+    Uses the mesh installed by :func:`activate`; no-op otherwise so model
+    code runs unchanged in single-device tests.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, ctx_rules = ctx
+    spec = logical_to_mesh_axes(axes, rules or ctx_rules, mesh)
+    spec = _divisible(x.shape, spec, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)

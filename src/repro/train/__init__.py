@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptState, lr_schedule
+from repro.train.loop import TrainState, make_train_step, train_state_axes

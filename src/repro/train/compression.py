@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback.
+
+Two usable levers on TPU:
+
+* ``bf16``     — carry the backward pass/reduction in bf16 (2x bytes saved on
+                 every grad all-reduce; free, standard).
+* ``int8_ef``  — per-tensor-scaled int8 quantization with an error-feedback
+                 residual carried in the train state (1-bit-SGD/EF-SGD
+                 lineage).  Applied to the gradient tree before the optimizer;
+                 under SPMD the quantized representation is what crosses the
+                 slow inter-pod links when the cross-pod reduction is staged
+                 explicitly (see ``train/loop.py``).
+
+Both are exact-shape pytree transforms, unit-tested against the property
+that EF compensates: sum of applied updates converges to sum of true grads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_int8_ef(grads, ef_state):
+    """Error-feedback int8 compression of a grad tree.
+
+    Returns (decompressed grads, new ef_state).  The quantize->dequantize
+    round trip is what a wire transfer would carry; the residual
+    (g - dequant) is added back next step.
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        return deq, gf - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,142 @@
+"""Fault tolerance: heartbeats, straggler detection, preemption-safe runner,
+elastic rescale.
+
+On a real multi-pod deployment each host runs this next to the training
+loop; the coordinator-side logic (who is slow, when to checkpoint, when to
+re-mesh) is pure Python over step-timing records and is fully unit-testable
+on CPU, which is what we do here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class HeartbeatRecord:
+    host_id: int
+    step: int
+    step_time_s: float
+    timestamp: float
+
+
+class StragglerDetector:
+    """Flags hosts whose recent step times exceed ``threshold`` x the fleet
+    median, and hosts that missed ``dead_after_s`` of heartbeats.
+
+    Mitigation hooks (what a coordinator does with the flags):
+      * straggler  -> reduce its data shard / trigger in-place restart
+      * dead       -> evict host, trigger elastic re-mesh from checkpoint
+    """
+
+    def __init__(self, n_hosts: int, threshold: float = 1.5,
+                 window: int = 16, dead_after_s: float = 60.0):
+        self.n_hosts = n_hosts
+        self.threshold = threshold
+        self.window = window
+        self.dead_after_s = dead_after_s
+        self._times: dict[int, list[float]] = {h: [] for h in range(n_hosts)}
+        self._last_seen: dict[int, float] = {h: time.time()
+                                             for h in range(n_hosts)}
+
+    def record(self, hb: HeartbeatRecord) -> None:
+        times = self._times[hb.host_id]
+        times.append(hb.step_time_s)
+        if len(times) > self.window:
+            del times[: len(times) - self.window]
+        self._last_seen[hb.host_id] = hb.timestamp
+
+    def stragglers(self) -> list[int]:
+        means = {h: float(np.mean(t)) for h, t in self._times.items() if t}
+        if len(means) < 2:
+            return []
+        median = float(np.median(list(means.values())))
+        return [h for h, m in means.items() if m > self.threshold * median]
+
+    def dead_hosts(self, now: Optional[float] = None) -> list[int]:
+        now = time.time() if now is None else now
+        return [h for h, seen in self._last_seen.items()
+                if now - seen > self.dead_after_s]
+
+
+class PreemptionGuard:
+    """SIGTERM-aware flag; checked once per step by the runner."""
+
+    def __init__(self, install_handler: bool = True):
+        self.preempted = False
+        if install_handler:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+            except ValueError:
+                pass  # not the main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.preempted = True
+
+
+@dataclasses.dataclass
+class RunResult:
+    completed_steps: int
+    final_state: object
+    interrupted: bool
+
+
+def run_with_fault_tolerance(
+    train_step: Callable,
+    state,
+    batch_at_step: Callable[[int], dict],
+    *,
+    num_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 50,
+    start_step: int = 0,
+    guard: Optional[PreemptionGuard] = None,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+    fail_at_step: Optional[int] = None,  # fault-injection for tests
+) -> RunResult:
+    """Checkpointed training driver with preemption handling.
+
+    Restart pattern: the caller finds ``latest_checkpoint``, restores state,
+    and calls this again with ``start_step`` = restored step.  The data
+    pipeline is step-indexed (``batch_at_step``), so restarts consume
+    exactly the batches they would have seen (deterministic skip-ahead).
+    """
+    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+    step = start_step
+    while step < num_steps:
+        if guard is not None and guard.preempted:
+            saver.wait()
+            ckpt_lib.save_checkpoint(ckpt_dir, step, state)
+            return RunResult(step, state, interrupted=True)
+        if fail_at_step is not None and step == fail_at_step:
+            saver.wait()
+            raise RuntimeError(f"injected fault at step {step}")
+        batch = batch_at_step(step)
+        state, metrics = train_step(state, batch)
+        step += 1
+        if on_metrics is not None:
+            on_metrics(step, metrics)
+        if step % ckpt_every == 0 or step == num_steps:
+            saver.save(step, state)
+    saver.wait()
+    return RunResult(step, state, interrupted=False)
+
+
+def elastic_restore(ckpt_dir: str, template, target_shardings=None):
+    """Restore the latest checkpoint onto a (possibly different) mesh.
+
+    Returns (state, step) or (None, 0) when no checkpoint exists.  Because
+    checkpoints are stored as full arrays, the same checkpoint restores on
+    any device count — this is the elastic-rescale path.
+    """
+    path = ckpt_lib.latest_checkpoint(ckpt_dir)
+    if path is None:
+        return None, 0
+    state = ckpt_lib.restore_checkpoint(path, template, target_shardings)
+    return state, ckpt_lib.checkpoint_step(path)

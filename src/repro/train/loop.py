@@ -1,0 +1,140 @@
+"""Train state + jit-able train step (mixed precision, grad accumulation,
+optional gradient compression).
+
+The step is written against the global (SPMD) view: batch arrives sharded
+over ("pod", "data"), params/optimizer FSDP+TP sharded per the logical-axis
+rules.  Gradient reductions are implicit in ``jax.grad`` under GSPMD; the
+memory lever for big archs is the grad-accumulation scan (saved activations
+scale with one microbatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from repro.sharding import Param, is_param
+from repro.train import compression as C
+from repro.train.optimizer import OptState, adamw_init, adamw_update, lr_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ef: Any  # error-feedback residuals (None unless int8_ef)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    compression: str = "none"  # none | bf16 | int8_ef
+
+
+def init_train_state(params, hyper: TrainHyper) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        ef=C.ef_init(params) if hyper.compression == "int8_ef" else None,
+    )
+
+
+def train_state_boxed(boxed_params, hyper: TrainHyper) -> TrainState:
+    """Boxed TrainState (for tree_shardings / dry-run input specs).
+
+    Optimizer moments inherit the parameter logical axes.
+    """
+    as_f32 = lambda p: Param(
+        jax.ShapeDtypeStruct(p.value.shape, jnp.float32)
+        if isinstance(p.value, jax.ShapeDtypeStruct)
+        else jnp.zeros(p.value.shape, jnp.float32),
+        p.axes)
+    mu = jax.tree_util.tree_map(as_f32, boxed_params, is_leaf=is_param)
+    nu = jax.tree_util.tree_map(as_f32, boxed_params, is_leaf=is_param)
+    ef = (jax.tree_util.tree_map(as_f32, boxed_params, is_leaf=is_param)
+          if hyper.compression == "int8_ef" else None)
+    return TrainState(
+        params=boxed_params,
+        opt=OptState(step=Param(jnp.zeros((), jnp.int32), ()), mu=mu, nu=nu),
+        ef=ef,
+    )
+
+
+def train_state_axes(boxed_state: TrainState):
+    """Logical-axes tree matching TrainState (for documentation/tests)."""
+    from repro.sharding import boxed_axes
+    return boxed_axes(boxed_state)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return {k: r(v) for k, v in batch.items()}
+
+
+def make_train_step(api: ModelAPI, hyper: TrainHyper):
+    cfg = api.cfg
+    n_micro = max(1, cfg.use_grad_accum_microbatches)
+
+    def loss_fn(params, batch):
+        loss, metrics = api.loss(params, batch)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        micro = _split_microbatches(batch, n_micro)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return loss_sum / n_micro, metrics, grads
+
+    def train_step(state: TrainState, batch: dict):
+        loss, metrics, grads = compute_grads(state.params, batch)
+
+        ef = state.ef
+        if hyper.compression == "bf16":
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16), grads)
+        elif hyper.compression == "int8_ef":
+            grads, ef = C.compress_grads_int8_ef(grads, state.ef)
+
+        lr = lr_schedule(state.opt.step, peak_lr=hyper.peak_lr,
+                         warmup_steps=hyper.warmup_steps,
+                         total_steps=hyper.total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, lr,
+            b1=hyper.b1, b2=hyper.b2,
+            weight_decay=hyper.weight_decay,
+            grad_clip_norm=hyper.grad_clip_norm)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["lr"] = lr
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return train_step

@@ -1,0 +1,79 @@
+"""AdamW + schedules, built from scratch (no optax in this environment).
+
+Optimizer states mirror the parameter tree (same logical axes), so the
+``tree_shardings`` used for params apply verbatim to m/v — fully sharded
+optimizer states (ZeRO-style) fall out of the FSDP param sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    mu: Any          # first moment  (pytree like params)
+    nu: Any          # second moment (pytree like params)
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(params, grads, state: OptState, lr,
+                 b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 grad_clip_norm: float | None = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gflat = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in gflat))
+    if grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = jnp.float32(1.0)
+
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    results = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([r[0] for r in results])
+    new_mu = treedef.unflatten([r[1] for r in results])
+    new_nu = treedef.unflatten([r[2] for r in results])
+    return new_params, OptState(step, new_mu, new_nu), {"grad_norm": gnorm}
+
+
+def lr_schedule(step, *, peak_lr=3e-4, warmup_steps=100, total_steps=10_000,
+                min_ratio=0.1):
+    """Linear warmup + cosine decay."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(
+        total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the 512-device fleet exists only
+# inside launch/dryrun.py).  Multi-device sharding tests spawn subprocesses
+# with their own XLA_FLAGS.
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,129 @@
+"""Deliverable (f): reduced same-family smoke config per assigned arch —
+one forward/train step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.models.api import model_api
+from repro.sharding import unbox
+from repro.train.loop import TrainHyper, init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _smoke_batch(cfg, bs=2, seq=16):
+    k1, k2 = jax.random.split(KEY)
+    if cfg.frontend is not None and not cfg.is_encoder_decoder:
+        t = cfg.num_frontend_tokens
+        batch = {
+            "tokens": jax.random.randint(k1, (bs, seq), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (bs, seq), 0, cfg.vocab_size),
+            "loss_mask": jnp.ones((bs, seq), jnp.float32),
+            "frontend_embeds": jax.random.normal(KEY, (bs, t, cfg.d_model)),
+        }
+        return batch
+    batch = {
+        "tokens": jax.random.randint(k1, (bs, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (bs, seq), 0, cfg.vocab_size),
+        "loss_mask": jnp.ones((bs, seq), jnp.float32),
+    }
+    if cfg.is_encoder_decoder:
+        batch["frontend_embeds"] = jax.random.normal(
+            KEY, (bs, max(1, seq // cfg.encoder_seq_ratio), cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    cfg = get_smoke_config(arch_id)
+    api = model_api(cfg)
+    params = unbox(api.init(KEY))
+    state = init_train_state(params, TrainHyper())
+    step = jax.jit(make_train_step(api, TrainHyper(warmup_steps=1,
+                                                   total_steps=10)))
+    batch = _smoke_batch(cfg)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch_id
+    assert np.isfinite(float(metrics["grad_norm"])), arch_id
+    # params actually changed
+    delta = jax.tree_util.tree_reduce(
+        lambda acc, t: acc + float(jnp.sum(jnp.abs(t[0] - t[1]))),
+        jax.tree_util.tree_map(lambda a, b: (a, b), new_state.params, params),
+        0.0)
+    assert delta > 0.0, arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode_step(arch_id):
+    cfg = get_smoke_config(arch_id)
+    api = model_api(cfg)
+    params = unbox(api.init(KEY))
+    bs, cache_len = 2, 24
+    if cfg.is_encoder_decoder:
+        cache = unbox(api.init_cache(bs, cache_len, src_len=4))
+    else:
+        cache = unbox(api.init_cache(bs, cache_len))
+    tok = jnp.zeros((bs, 1), jnp.int32)
+    logits, new_cache = jax.jit(api.decode_step)(params, cache, tok,
+                                                 jnp.int32(0))
+    assert logits.shape == (bs, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), arch_id
+
+
+def test_full_configs_match_brief():
+    """The full (dry-run) configs carry the exact assigned dimensions."""
+    expected = {
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    }
+    for arch, (l, d, h, kv, ff, v) in expected.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (l, d, h, kv, ff, v), arch
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.num_experts, q.num_experts_per_token) == (128, 8)
+    m = get_config("moonshot-v1-16b-a3b")
+    assert (m.num_experts, m.num_experts_per_token) == (64, 6)
+    j = get_config("jamba-v0.1-52b")
+    assert (j.num_experts, j.num_experts_per_token) == (16, 2)
+    assert j.pattern.count("A") * 8 == j.num_layers  # 1:7 interleave
+
+
+def test_long_500k_applicability():
+    runnable = {a for a in ARCH_IDS
+                if cell_applicable(get_config(a), "long_500k")[0]}
+    assert runnable == {"mamba2-130m", "jamba-v0.1-52b", "h2o-danube-3-4b"}
+
+
+def test_param_counts_plausible():
+    """Analytic param counts are within the advertised model scale."""
+    approx = {
+        "mistral-large-123b": (110e9, 135e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "internvl2-76b": (60e9, 80e9),
+        "qwen3-moe-30b-a3b": (25e9, 35e9),
+        # brief config (48L x 64e x d_ff 1408) arithmetically gives ~28B;
+        # the advertised 16B corresponds to the 27-layer release
+        "moonshot-v1-16b-a3b": (22e9, 32e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "stablelm-1.6b": (1.2e9, 2.0e9),
+        "h2o-danube-3-4b": (3e9, 5e9),
+        "minicpm3-4b": (3e9, 5.5e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

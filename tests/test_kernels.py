@@ -1,0 +1,109 @@
+"""Per-kernel correctness: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the Pallas kernel body on CPU)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv_dataflow import conv2d, conv2d_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+
+KEY = jax.random.PRNGKey(3)
+
+_TOL = {jnp.float32: dict(rtol=1e-4, atol=1e-4),
+        jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+CONV_SHAPES = [
+    (1, 8, 8, 4, 8, 3),
+    (2, 12, 10, 8, 16, 5),
+    (1, 6, 6, 3, 5, 1),
+    (2, 16, 16, 16, 32, 3),
+]
+
+
+@pytest.mark.parametrize("dataflow", ["SconvOD", "SconvIC", "MconvMC"])
+@pytest.mark.parametrize("shape", CONV_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_dataflow_vs_oracle(dataflow, shape, dtype):
+    n, h, w_, ci, co, k = shape
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (n, h, w_, ci), jnp.float32)
+    w = jax.random.normal(k2, (k, k, ci, co), jnp.float32) * 0.2
+    ref = conv2d_ref(x, w)
+    out = conv2d(x.astype(dtype), w.astype(dtype), dataflow=dataflow,
+                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_TOL[dtype])
+
+
+def test_conv_same_padding_and_stride():
+    x = jax.random.normal(KEY, (1, 9, 9, 4))
+    w = jax.random.normal(KEY, (3, 3, 4, 8)) * 0.2
+    out = conv2d(x, w, dataflow="MconvMC", padding="SAME", stride=2,
+                 interpret=True)
+    assert out.shape == (1, 5, 5, 8)
+
+
+ATTN_SHAPES = [
+    (1, 64, 4, 4, 32, True),
+    (2, 128, 4, 2, 16, True),
+    (1, 64, 2, 1, 32, False),   # MQA
+    (2, 96, 8, 8, 64, True),
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_oracle(shape, dtype):
+    b, s, h, kh, d, causal = shape
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+    out = flash_attention(q.astype(dtype), k.astype(dtype), v.astype(dtype),
+                          causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    kr = jnp.repeat(k, h // kh, axis=2)
+    vr = jnp.repeat(v, h // kh, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = kr.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = vr.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    ref = attention_ref(qf, kf, vf, causal=causal, scale=1 / math.sqrt(d))
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_TOL[dtype])
+
+
+SSD_SHAPES = [
+    (1, 32, 2, 8, 4, 8),
+    (2, 64, 3, 16, 8, 16),
+    (1, 48, 1, 8, 16, 16),
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_vs_oracle(shape, dtype):
+    b, s, h, p, n, chunk = shape
+    ks = jax.random.split(KEY, 4)
+    u = (jax.random.normal(ks[0], (b, s, h, p), jnp.float32) * 0.3)
+    a = -jnp.abs(jax.random.normal(ks[1], (b, s, h))) * 0.2
+    Bm = jax.random.normal(ks[2], (b, s, n), jnp.float32) * 0.5
+    Cm = jax.random.normal(ks[3], (b, s, n), jnp.float32) * 0.5
+    y, sfin = ssd_scan(u.astype(dtype), a, Bm.astype(dtype),
+                       Cm.astype(dtype), chunk=chunk, interpret=True)
+    uf = u.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    af = a.transpose(0, 2, 1).reshape(b * h, s)
+    Bf = jnp.repeat(Bm[:, None], h, 1).reshape(b * h, s, n)
+    Cf = jnp.repeat(Cm[:, None], h, 1).reshape(b * h, s, n)
+    yr, hr = ssd_ref(uf, af, Bf, Cf)
+    yr = yr.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    hr = hr.reshape(b, h, n, p)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_TOL[dtype])
+    np.testing.assert_allclose(np.asarray(sfin, np.float32),
+                               np.asarray(hr, np.float32), **_TOL[dtype])

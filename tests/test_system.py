@@ -1,0 +1,122 @@
+"""End-to-end behaviour of the paper's system: environment -> task queues ->
+HMAI -> schedulers (FlexAI vs baselines), plus the headline orderings the
+paper reports (§8)."""
+import numpy as np
+import pytest
+
+from repro.core.criteria import camera_safety_time
+from repro.core.environment import (Area, CAMERA_GROUPS, DrivingEnvironment,
+                                    EnvironmentParams, Scenario, camera_hz)
+from repro.core.hmai import (ACCELERATOR_SPECS, HMAI_CONFIG, HMAIPlatform,
+                             HOMOGENEOUS_CONFIGS, T4_SPEC)
+from repro.core.flexai import FlexAIAgent, FlexAIConfig
+from repro.core.schedulers import get_scheduler
+from repro.core.tasks import TaskKind
+
+RS = 0.05  # rate/capacity subsampling (same load ratio as full deployment)
+
+
+def _queue(seed, km=0.15):
+    return DrivingEnvironment(EnvironmentParams(
+        route_km=km, rate_scale=RS, seed=seed)).build_task_queue()
+
+
+def _platform():
+    return HMAIPlatform(capacity_scale=RS)
+
+
+def test_camera_rates_reproduce_table5():
+    """Urban aggregate FPS requirements (Table 5)."""
+    def total(scenario, tra=False):
+        tot = 0.0
+        for g in CAMERA_GROUPS:
+            if tra and g.name == "RC" and scenario != Scenario.RE:
+                continue
+            tot += g.count * camera_hz(Area.UB, scenario, g.name)
+        return tot
+    assert total(Scenario.GS) == pytest.approx(870)
+    assert total(Scenario.GS, tra=True) == pytest.approx(840)
+    assert total(Scenario.TL) == pytest.approx(950)
+    assert total(Scenario.TL, tra=True) == pytest.approx(920)
+    assert total(Scenario.RE) == pytest.approx(740)
+    assert total(Scenario.RE, tra=True) == pytest.approx(740)
+
+
+def test_camera_count_is_30():
+    assert sum(g.count for g in CAMERA_GROUPS) == 30
+
+
+def test_highway_never_reverses():
+    env = DrivingEnvironment(EnvironmentParams(area=Area.HW, route_km=0.5,
+                                               rate_scale=0.01, seed=3))
+    assert all(seg.scenario != Scenario.RE for seg in env.segments)
+
+
+def test_safety_time_ordering():
+    """Faster areas -> tighter budgets; forward cameras see farther."""
+    fc_ub = camera_safety_time("FC", "UB", "GS")
+    fc_hw = camera_safety_time("FC", "HW", "GS")
+    rc_ub = camera_safety_time("RC", "UB", "GS")
+    assert fc_hw < fc_ub          # Fig 7a: ST_250FC-HW < ST_250FC-UB
+    assert rc_ub < fc_ub          # shorter range -> less budget
+    assert fc_ub > 0
+
+
+def test_queue_structure():
+    q = _queue(0)
+    assert len(q) > 100
+    times = [t.arrival_time for t in q]
+    assert times == sorted(times)
+    kinds = {t.kind for t in q}
+    assert kinds == {TaskKind.YOLO, TaskKind.SSD, TaskKind.GOTURN}
+    # DET alternates YOLO/SSD per camera (§2.1)
+    fc0 = [t.kind for t in q
+           if t.camera_group == "FC" and t.camera_id == 0
+           and t.kind != TaskKind.GOTURN]
+    assert all(a != b for a, b in zip(fc0, fc0[1:]))
+
+
+def test_hmai_heterogeneous_beats_worst_on_balance():
+    q = _queue(1)
+    p_good = _platform()
+    get_scheduler("ata").schedule(p_good, q)
+    p_bad = _platform()
+    get_scheduler("worst").schedule(p_bad, q)
+    assert p_good.r_balance > p_bad.r_balance
+    assert p_good.summary()["stm_rate"] > p_bad.summary()["stm_rate"]
+
+
+def test_scheduler_registry_complete():
+    for name in ("minmin", "ata", "ga", "sa", "worst", "random"):
+        assert get_scheduler(name) is not None
+
+
+def test_flexai_learns_and_beats_random():
+    """Short-budget training still beats the random scheduler on STM+wait."""
+    queues = [_queue(s, km=0.08) for s in range(2)]
+    plat = _platform()
+    agent = FlexAIAgent(plat, FlexAIConfig(
+        lr=3e-4, min_replay=128, update_every=2, eps_decay_steps=8000))
+    agent.train(plat, queues, episodes=6)
+    test_q = _queue(9, km=0.08)
+    p1 = _platform()
+    flex = agent.schedule(p1, test_q)
+    p2 = _platform()
+    rand = get_scheduler("random").schedule(p2, test_q)
+    assert flex["stm_rate"] >= rand["stm_rate"] - 0.05
+    assert flex["schedule_time_per_task_s"] < 0.01  # predictive: O(1)/task
+
+
+def test_accelerator_specs_match_table8():
+    assert ACCELERATOR_SPECS["SconvOD"].fps["yolo"] == pytest.approx(170.37)
+    assert ACCELERATOR_SPECS["SconvIC"].fps["ssd"] == pytest.approx(82.94)
+    assert ACCELERATOR_SPECS["MconvMC"].fps["goturn"] == pytest.approx(500.54)
+    assert dict(HMAI_CONFIG) == {"SconvOD": 4, "SconvIC": 4, "MconvMC": 3}
+    # §8.2 power calibration: HMAI ~= 2x Tesla T4
+    hmai_power = sum(ACCELERATOR_SPECS[n].power_w * c for n, c in HMAI_CONFIG)
+    assert hmai_power == pytest.approx(2 * T4_SPEC.power_w, rel=0.05)
+
+
+def test_homogeneous_configs_match_paper():
+    assert dict(HOMOGENEOUS_CONFIGS["homo-SconvOD"]) == {"SconvOD": 13}
+    assert dict(HOMOGENEOUS_CONFIGS["homo-MconvMC"]) == {"MconvMC": 12}
