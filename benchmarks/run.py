@@ -20,6 +20,7 @@ MODULES = [
     "fig12_scheduler_comparison",
     "fig13_stmrate",
     "fig14_braking_distance",
+    "scheduler_throughput",
     "kernel_micro",
     "roofline",
 ]

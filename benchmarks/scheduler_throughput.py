@@ -1,0 +1,113 @@
+"""Scheduled-tasks/sec: per-task Python loop vs fused lax.scan vs vmapped
+multi-route batch (the ISSUE-1 perf tentpole).
+
+Emits the standard benchmark rows *and* ``BENCH_scheduler.json`` (repo
+root) so the throughput trajectory is tracked across PRs.  The paper's bar
+(Table 5): the scheduler must keep up with 870-950 decisions/sec aggregate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RATE_SCALE, platform, row, save
+
+
+def _routes(n: int, km: float):
+    from repro.core.environment import EnvironmentParams, build_task_queue
+    return [build_task_queue(EnvironmentParams(
+        route_km=km, rate_scale=RATE_SCALE, seed=100 + s))
+        for s in range(n)]
+
+
+def _time(fn, iters: int = 3):
+    fn()  # warmup (includes compile for the jitted paths)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(quick: bool = True) -> list:
+    import jax
+    from repro.core.flexai import FlexAIAgent, FlexAIConfig
+    from repro.core.flexai.engine import make_schedule_fn
+    from repro.core.platform_jax import spec_from_platform
+    from repro.core.schedulers import get_scan_scheduler, get_scheduler
+    from repro.core.tasks import stack_task_arrays, tasks_to_arrays
+
+    km = 0.1 if quick else 0.25
+    n_routes = 4 if quick else 8
+    routes = _routes(n_routes, km)
+    n_tasks = len(routes[0])
+    arrays = [tasks_to_arrays(q) for q in routes]
+    batch = stack_task_arrays(arrays)
+
+    plat = platform()
+    agent = FlexAIAgent(plat, FlexAIConfig())
+    spec = spec_from_platform(plat)
+
+    # 1) per-task Python loop (the pre-tentpole hot path)
+    t_loop = _time(lambda: agent.schedule(platform(), routes[0]),
+                   iters=2 if quick else 3)
+    loop_tps = n_tasks / t_loop
+
+    # 2) fused scan, one dispatch per route
+    sched = make_schedule_fn(spec, agent.cfg.backlog_scale)
+    params = agent.learner.eval_p
+    t_scan = _time(
+        lambda: jax.block_until_ready(sched(params, arrays[0])))
+    scan_tps = n_tasks / t_scan
+
+    # 3) vmapped multi-route batch, one dispatch per batch
+    sched_b = make_schedule_fn(spec, agent.cfg.backlog_scale, batched=True)
+    t_batch = _time(lambda: jax.block_until_ready(sched_b(params, batch)))
+    batch_tasks = sum(len(q) for q in routes)
+    batch_tps = batch_tasks / t_batch
+
+    # 4) heuristics through the same array path (context row)
+    ata_loop = _time(lambda: get_scheduler("ata").schedule(
+        platform(), routes[0]), iters=2 if quick else 3)
+    ata_fn = get_scan_scheduler("ata")
+    t_ata = _time(lambda: jax.block_until_ready(ata_fn(spec, arrays[0])))
+
+    results = {
+        "n_tasks_per_route": n_tasks,
+        "n_routes": n_routes,
+        "rate_scale": RATE_SCALE,
+        "loop_tasks_per_s": round(loop_tps, 1),
+        "scan_tasks_per_s": round(scan_tps, 1),
+        "vmap_batch_tasks_per_s": round(batch_tps, 1),
+        "ata_loop_tasks_per_s": round(len(routes[0]) / ata_loop, 1),
+        "ata_scan_tasks_per_s": round(len(routes[0]) / t_ata, 1),
+        "speedup_scan_vs_loop": round(scan_tps / loop_tps, 2),
+        "speedup_batch_vs_loop": round(batch_tps / loop_tps, 2),
+        "meets_table5_950fps": bool(scan_tps >= 950.0),
+    }
+    with open(os.path.join(os.getcwd(), "BENCH_scheduler.json"), "w") as f:
+        json.dump(results, f, indent=1)
+
+    rows = [
+        row("sched_throughput/loop", t_loop / n_tasks * 1e6,
+            f"{loop_tps:.0f} tasks/s"),
+        row("sched_throughput/scan", t_scan / n_tasks * 1e6,
+            f"{scan_tps:.0f} tasks/s"),
+        row("sched_throughput/vmap_batch", t_batch / batch_tasks * 1e6,
+            f"{batch_tps:.0f} tasks/s over {n_routes} routes"),
+        row("sched_throughput/speedup_scan_vs_loop", 0.0,
+            results["speedup_scan_vs_loop"]),
+        row("sched_throughput/speedup_batch_vs_loop", 0.0,
+            results["speedup_batch_vs_loop"]),
+        row("sched_throughput/ata_scan_vs_loop", 0.0,
+            round(ata_loop / t_ata, 2)),
+    ]
+    save("scheduler_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=os.environ.get("BENCH_FULL", "") != "1"):
+        print(r)

@@ -185,3 +185,20 @@ class DrivingEnvironment:
 
 def build_task_queue(params: EnvironmentParams) -> list:
     return DrivingEnvironment(params).build_task_queue()
+
+
+def build_task_arrays(params: EnvironmentParams):
+    """Precompiled struct-of-arrays queue for the device-resident scan
+    engine (``tasks.TaskArrays``): one host-side pass, then the route is
+    a handful of jnp arrays."""
+    from repro.core.tasks import tasks_to_arrays
+    return tasks_to_arrays(DrivingEnvironment(params).build_task_queue())
+
+
+def build_route_batch(params_list: list):
+    """Stack several routes (different seeds/areas) into one [R, T_max]
+    ``TaskArrays`` batch for the vmapped engine paths."""
+    from repro.core.tasks import stack_task_arrays, tasks_to_arrays
+    return stack_task_arrays(
+        [tasks_to_arrays(DrivingEnvironment(p).build_task_queue())
+         for p in params_list])

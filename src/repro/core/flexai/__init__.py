@@ -1,4 +1,7 @@
 from repro.core.flexai.dqn import DQNParams, init_qnet, qnet_apply, DQNLearner
-from repro.core.flexai.replay import ReplayBuffer
+from repro.core.flexai.replay import ReplayBuffer, DeviceReplay
 from repro.core.flexai.agent import FlexAIAgent, FlexAIConfig
 from repro.core.flexai.reward import compute_reward
+from repro.core.flexai.engine import (ScanFlexAI, TrainState,
+                                      make_schedule_fn, make_train_fn,
+                                      train_init)

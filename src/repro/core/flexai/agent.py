@@ -21,7 +21,7 @@ from repro.core.flexai.dqn import DQNLearner
 from repro.core.flexai.replay import ReplayBuffer
 from repro.core.flexai.reward import compute_reward, snapshot
 from repro.core.hmai import HMAIPlatform
-from repro.core.tasks import Task, task_features
+from repro.core.tasks import KIND_INDEX, Task, task_features
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,9 +64,8 @@ class FlexAIAgent:
         tf = np.asarray(task_features(task), np.float32)
         hw = platform.hw_info(now=task.arrival_time).astype(np.float32)
         hw[:, 1] = np.log1p(hw[:, 1] / self.cfg.backlog_scale)
-        exec_row = np.asarray(
-            [platform.exec_time(task, i) for i in range(platform.n)],
-            np.float32)[:, None]
+        exec_row = platform.exec_time_table[:, KIND_INDEX[task.kind]] \
+            .astype(np.float32)[:, None]
         hw = np.concatenate([hw, exec_row], axis=1)
         return np.concatenate([tf, hw.reshape(-1)])
 
@@ -161,4 +160,37 @@ class FlexAIAgent:
         summ = platform.summary()
         summ["schedule_time_s"] = sched_time
         summ["schedule_time_per_task_s"] = sched_time / max(len(tasks), 1)
+        return summ
+
+    def schedule_scan(self, platform: HMAIPlatform, tasks) -> dict:
+        """Greedy inference through the device-resident engine: identical
+        policy/weights as ``schedule``, one device dispatch per route
+        instead of one per task.  ``tasks`` may be a Task list or a
+        precompiled ``TaskArrays``; the jitted scan is cached per
+        (platform shape, route length)."""
+        from repro.core.flexai.engine import make_schedule_fn
+        from repro.core.platform_jax import spec_from_platform, summarize
+        from repro.core.tasks import TaskArrays, tasks_to_arrays
+        spec = spec_from_platform(platform)
+        # key on the table contents, not just the accelerator count — two
+        # platforms with equal n but different hardware must not share a
+        # compiled closure
+        key = (platform.exec_time_table.tobytes(),
+               platform.energy_table.tobytes(),
+               float(self.cfg.backlog_scale))
+        cache = getattr(self, "_scan_cache", None)
+        if cache is None:
+            cache = self._scan_cache = {}
+        if key not in cache:
+            cache[key] = make_schedule_fn(spec, self.cfg.backlog_scale)
+        ta = tasks if isinstance(tasks, TaskArrays) else \
+            tasks_to_arrays(tasks)
+        t0 = time.perf_counter()
+        final, recs = cache[key](self.learner.eval_p, ta)
+        jax.block_until_ready(final)
+        dt = time.perf_counter() - t0
+        summ = summarize(spec, final, recs)
+        summ["schedule_time_s"] = dt
+        summ["schedule_time_per_task_s"] = dt / max(ta.num_tasks, 1)
+        summ["placements"] = np.asarray(recs.action)
         return summ

@@ -64,10 +64,10 @@ def _adam_init(params: DQNParams) -> AdamState:
     return AdamState(jnp.zeros((), jnp.int32), z, z)
 
 
-@functools.partial(jax.jit, static_argnames=("gamma", "lr"))
-def dqn_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
-               batch: dict, *, gamma: float = 0.95, lr: float = 0.01):
-    """One TD update on a replay batch.
+def dqn_td_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
+                  batch: dict, gamma: float = 0.95, lr: float = 0.01):
+    """One TD update on a replay batch — pure (unjitted), so the scan
+    engine can inline it in a ``lax.scan`` body.
 
     batch: s [B,D], a [B], r [B], s_next [B,D], done [B].
     Returns (new_eval_p, new_opt, loss).
@@ -111,6 +111,13 @@ def dqn_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
     new_m = DQNParams(*[r[1] for r in results])
     new_v = DQNParams(*[r[2] for r in results])
     return new_p, AdamState(step, new_m, new_v), loss
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lr"))
+def dqn_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
+               batch: dict, *, gamma: float = 0.95, lr: float = 0.01):
+    """Jitted host-loop entry point around ``dqn_td_update``."""
+    return dqn_td_update(eval_p, targ_p, opt, batch, gamma=gamma, lr=lr)
 
 
 class DQNLearner:

@@ -1,0 +1,276 @@
+"""Device-resident FlexAI episode engine.
+
+The Python training/inference loop (``agent.py``) pays a host->device
+roundtrip per task: one jitted Q forward for ``act`` and one ``dqn_update``
+dispatch per TD step.  Here the whole route runs inside a single
+``lax.scan``:
+
+* ``make_schedule_fn``  — greedy inference: state-vector build + Q argmax +
+  ``platform_step`` fused per scan step; one device dispatch per route.
+* ``make_train_fn``     — epsilon-greedy act + platform step + dGvalue+dMS
+  reward + device-replay write + (on the ``update_every`` cadence) an
+  inlined ``dqn_td_update`` with TargNet sync, all in the scan body.
+* both come with a ``jax.vmap``-ed batch variant: routes padded to a common
+  length (``TaskArrays.valid`` masks the tail) so one device call schedules
+  or trains N routes/seeds.
+
+``ScanFlexAI`` is the host-side convenience wrapper mirroring
+``FlexAIAgent``'s train/schedule surface on top of these functions.
+See DESIGN.md ("Scan-body layout").
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flexai.dqn import (AdamState, DQNParams, _adam_init,
+                                   dqn_td_update, init_qnet, qnet_apply)
+from repro.core.flexai.replay import (DeviceReplay, device_replay_add,
+                                      device_replay_init,
+                                      device_replay_sample)
+from repro.core.flexai.reward import reward_from_states
+from repro.core.platform_jax import (PlatformSpec, kind_feature_table,
+                                     platform_init, platform_step,
+                                     spec_from_platform, state_vector,
+                                     summarize)
+from repro.core.tasks import TaskArrays, stack_task_arrays, tasks_to_arrays
+
+
+# ---------------------------------------------------------------------------
+# greedy inference
+# ---------------------------------------------------------------------------
+
+def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
+                     batched: bool = False):
+    """Compile the greedy scheduler.
+
+    Returns ``fn(params, tasks) -> (final_state, records)``; with
+    ``batched=True`` the tasks carry a leading route axis [R, T] and the
+    params are shared across routes.
+    """
+    feat = jnp.asarray(kind_feature_table())
+
+    def body(params, state, task):
+        sv = state_vector(spec, feat, backlog_scale, state, task)
+        action = jnp.argmax(qnet_apply(params, sv)).astype(jnp.int32)
+        return platform_step(spec, state, task, action)
+
+    def run(params, tasks: TaskArrays):
+        final, recs = jax.lax.scan(functools.partial(body, params),
+                                   platform_init(spec.n), tasks)
+        return final, recs
+
+    if batched:
+        run = jax.vmap(run, in_axes=(None, 0))
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# fused training episode
+# ---------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    """Everything the fused episode mutates, as one pytree (per lane when
+    vmapped): EvalNet/TargNet/Adam, the device replay ring, the epsilon /
+    target-sync counters, and the PRNG key."""
+    eval_p: DQNParams
+    targ_p: DQNParams
+    opt: AdamState
+    replay: DeviceReplay
+    env_steps: jax.Array   # i32: epsilon schedule position
+    updates: jax.Array     # i32: TD updates done (TargNet cadence)
+    key: jax.Array
+
+
+def train_init(key, state_dim: int, n_actions: int,
+               replay_capacity: int) -> TrainState:
+    params = init_qnet(key, state_dim, n_actions)
+    return TrainState(
+        eval_p=params, targ_p=params, opt=_adam_init(params),
+        replay=device_replay_init(replay_capacity, state_dim),
+        env_steps=jnp.int32(0), updates=jnp.int32(0),
+        key=jax.random.fold_in(key, 1),
+    )
+
+
+def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
+    """Compile the fused training episode for a ``FlexAIConfig``-shaped
+    ``cfg`` (gamma, lr, batch_size, min_replay, target_sync_every,
+    eps_start/end/decay_steps, update_every, backlog_scale).
+
+    Returns ``fn(train_state, tasks) -> (train_state, platform_state,
+    records, losses, update_mask)``.  ``batched=True`` vmaps over lanes:
+    stacked TrainState (independent seeds) x stacked routes.
+    """
+    feat = jnp.asarray(kind_feature_table())
+    n_actions = spec.n
+
+    def body(carry, x):
+        ts, plat = carry
+        task, nxt_task, done = x
+        key, k_eps, k_act, k_smp = jax.random.split(ts.key, 4)
+
+        sv = state_vector(spec, feat, cfg.backlog_scale, plat, task)
+        frac = jnp.minimum(
+            1.0, ts.env_steps.astype(jnp.float32)
+            / max(cfg.eps_decay_steps, 1))
+        eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+        explore = jax.random.uniform(k_eps) < eps
+        greedy = jnp.argmax(qnet_apply(ts.eval_p, sv))
+        action = jnp.where(
+            explore, jax.random.randint(k_act, (), 0, n_actions),
+            greedy).astype(jnp.int32)
+
+        plat2, rec = platform_step(spec, plat, task, action)
+        reward = reward_from_states(spec, plat, plat2)
+        nsv = state_vector(spec, feat, cfg.backlog_scale, plat2, nxt_task)
+
+        valid = task.valid
+        replay = device_replay_add(ts.replay, sv, action, reward, nsv,
+                                   done.astype(jnp.float32), write=valid)
+        env_steps = ts.env_steps + valid.astype(jnp.int32)
+        do_update = (valid & (replay.size >= cfg.min_replay)
+                     & (env_steps % cfg.update_every == 0))
+
+        def upd(_):
+            batch = device_replay_sample(replay, k_smp, cfg.batch_size)
+            new_p, new_opt, loss = dqn_td_update(
+                ts.eval_p, ts.targ_p, ts.opt, batch,
+                gamma=cfg.gamma, lr=cfg.lr)
+            updates = ts.updates + 1
+            sync = (updates % cfg.target_sync_every) == 0
+            targ = jax.tree_util.tree_map(
+                lambda t, e: jnp.where(sync, e, t), ts.targ_p, new_p)
+            return new_p, targ, new_opt, updates, loss
+
+        def skip(_):
+            return (ts.eval_p, ts.targ_p, ts.opt, ts.updates,
+                    jnp.float32(0.0))
+
+        eval_p, targ_p, opt, updates, loss = jax.lax.cond(
+            do_update, upd, skip, None)
+        ts2 = TrainState(eval_p=eval_p, targ_p=targ_p, opt=opt,
+                         replay=replay, env_steps=env_steps,
+                         updates=updates, key=key)
+        return (ts2, plat2), (rec, loss, do_update)
+
+    def run(ts: TrainState, tasks: TaskArrays):
+        # S_{i+1} pairs with the *next valid* task; the last valid task
+        # pairs with itself and carries done=True, matching the Python
+        # loop — on padded routes the terminal transition must not
+        # bootstrap from a padding row
+        next_valid = jnp.concatenate(
+            [tasks.valid[1:], jnp.zeros((1,), bool)])
+        nxt = jax.tree_util.tree_map(
+            lambda a: jnp.where(next_valid,
+                                jnp.concatenate([a[1:], a[-1:]]), a),
+            tasks)
+        t = tasks.arrival.shape[0]
+        done = jnp.arange(t) == tasks.valid.sum() - 1
+        (ts_f, plat_f), (recs, losses, upd_mask) = jax.lax.scan(
+            body, (ts, platform_init(spec.n)), (tasks, nxt, done))
+        return ts_f, plat_f, recs, losses, upd_mask
+
+    # note: no buffer donation — at init eval_p and targ_p alias the same
+    # arrays, and donating an aliased pytree is an XLA error
+    if batched:
+        run = jax.vmap(run, in_axes=(0, 0))
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# host-side wrapper
+# ---------------------------------------------------------------------------
+
+class ScanFlexAI:
+    """FlexAI with the device-resident engine: ``FlexAIAgent``'s surface
+    (train over queues, greedy schedule, weight export) at one device
+    dispatch per route — or per route *batch* with ``lanes > 1``."""
+
+    def __init__(self, platform, cfg, lanes: int = 1):
+        self.cfg = cfg
+        self.spec = spec_from_platform(platform)
+        self.n_actions = platform.n
+        self.state_dim = 3 + 5 * platform.n
+        self.lanes = lanes
+        key = jax.random.PRNGKey(cfg.seed)
+        if lanes == 1:
+            self.ts = train_init(key, self.state_dim, self.n_actions,
+                                 cfg.replay_capacity)
+        else:
+            self.ts = jax.vmap(
+                lambda k: train_init(k, self.state_dim, self.n_actions,
+                                     cfg.replay_capacity)
+            )(jax.random.split(key, lanes))
+        self._train_fn = make_train_fn(self.spec, cfg, batched=lanes > 1)
+        self._sched_fn = make_schedule_fn(self.spec, cfg.backlog_scale)
+        self.losses: list[float] = []
+
+    def _as_arrays(self, tasks) -> TaskArrays:
+        return tasks if isinstance(tasks, TaskArrays) else \
+            tasks_to_arrays(tasks)
+
+    def train_episode(self, tasks) -> dict:
+        """One fused episode (single-lane) or one episode per lane
+        (``tasks`` as a list of routes / stacked TaskArrays)."""
+        if self.lanes > 1:
+            ta = tasks if isinstance(tasks, TaskArrays) else \
+                stack_task_arrays([self._as_arrays(q) for q in tasks])
+        else:
+            ta = self._as_arrays(tasks)
+        self.ts, plat, recs, losses, upd = self._train_fn(self.ts, ta)
+        losses, upd = np.asarray(losses), np.asarray(upd, bool)
+        if upd.any():
+            self.losses.extend(losses[upd].tolist())
+        if self.lanes > 1:
+            summ = []
+            for i in range(self.lanes):
+                lane = summarize(
+                    self.spec,
+                    jax.tree_util.tree_map(lambda a, i=i: a[i], plat),
+                    jax.tree_util.tree_map(lambda a, i=i: a[i], recs))
+                m = upd[i]
+                lane["mean_loss"] = (float(losses[i][m].mean())
+                                     if m.any() else None)
+                summ.append(lane)
+            return {"lanes": summ}
+        s = summarize(self.spec, plat, recs)
+        s["mean_loss"] = float(losses[upd].mean()) if upd.any() else None
+        return s
+
+    def train(self, queues: list, episodes: int) -> list:
+        """Cycle the queue pool; with ``lanes > 1`` each episode consumes
+        the next ``lanes`` routes round-robin, one per lane."""
+        routes = [self._as_arrays(q) for q in queues]
+        history = []
+        for ep in range(episodes):
+            if self.lanes == 1:
+                history.append(self.train_episode(routes[ep % len(routes)]))
+            else:
+                lane_routes = [
+                    routes[(ep * self.lanes + i) % len(routes)]
+                    for i in range(self.lanes)]
+                history.append(self.train_episode(lane_routes))
+        return history
+
+    def eval_params(self, lane: int = 0) -> DQNParams:
+        if self.lanes == 1:
+            return self.ts.eval_p
+        return jax.tree_util.tree_map(lambda a: a[lane], self.ts.eval_p)
+
+    def schedule(self, tasks, lane: int = 0) -> dict:
+        ta = self._as_arrays(tasks)
+        t0 = time.perf_counter()
+        final, recs = self._sched_fn(self.eval_params(lane), ta)
+        jax.block_until_ready(final)
+        dt = time.perf_counter() - t0
+        summ = summarize(self.spec, final, recs)
+        summ["schedule_time_s"] = dt
+        summ["schedule_time_per_task_s"] = dt / max(ta.num_tasks, 1)
+        summ["placements"] = np.asarray(recs.action)
+        return summ

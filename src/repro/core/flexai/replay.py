@@ -1,5 +1,13 @@
-"""Experience replay memory (paper §7.1 step (2))."""
+"""Experience replay memory (paper §7.1 step (2)).
+
+Two implementations: the host-side ``ReplayBuffer`` used by the Python
+training loop, and ``DeviceReplay`` — the same circular buffer as a pytree
+of device arrays with pure add/sample ops, so the scan engine can write a
+transition and sample a TD batch without leaving the device.
+"""
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import numpy as np
 
@@ -32,3 +40,62 @@ class ReplayBuffer:
             "s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
             "s_next": self.s_next[idx], "done": self.done[idx],
         }
+
+
+# ---------------------------------------------------------------------------
+# device-resident replay (scan engine)
+# ---------------------------------------------------------------------------
+
+class DeviceReplay(NamedTuple):
+    s: "object"       # [C, D] f32
+    a: "object"       # [C] i32
+    r: "object"       # [C] f32
+    s_next: "object"  # [C, D] f32
+    done: "object"    # [C] f32
+    ptr: "object"     # scalar i32
+    size: "object"    # scalar i32
+
+
+def device_replay_init(capacity: int, state_dim: int) -> DeviceReplay:
+    """Rows [0, capacity) are the ring; row ``capacity`` is a trash slot
+    that absorbs masked-out writes, keeping every ``add`` an in-place O(D)
+    dynamic update (a predicated write would select over the whole ring
+    each scan step — catastrophic under vmap)."""
+    import jax.numpy as jnp
+    return DeviceReplay(
+        s=jnp.zeros((capacity + 1, state_dim), jnp.float32),
+        a=jnp.zeros((capacity + 1,), jnp.int32),
+        r=jnp.zeros((capacity + 1,), jnp.float32),
+        s_next=jnp.zeros((capacity + 1, state_dim), jnp.float32),
+        done=jnp.zeros((capacity + 1,), jnp.float32),
+        ptr=jnp.int32(0), size=jnp.int32(0),
+    )
+
+
+def device_replay_add(buf: DeviceReplay, s, a, r, s_next, done,
+                      write=True) -> DeviceReplay:
+    """Pure circular write at ``ptr``; when ``write`` is False (padding
+    row in a vmapped lane) the values land in the trash slot instead."""
+    import jax.numpy as jnp
+    cap = buf.s.shape[0] - 1
+    i = jnp.where(write, buf.ptr, cap)
+    return DeviceReplay(
+        s=buf.s.at[i].set(s),
+        a=buf.a.at[i].set(jnp.asarray(a, jnp.int32)),
+        r=buf.r.at[i].set(r),
+        s_next=buf.s_next.at[i].set(s_next),
+        done=buf.done.at[i].set(jnp.asarray(done, jnp.float32)),
+        ptr=jnp.where(write, (buf.ptr + 1) % cap, buf.ptr),
+        size=jnp.where(write, jnp.minimum(buf.size + 1, cap), buf.size),
+    )
+
+
+def device_replay_sample(buf: DeviceReplay, key, batch_size: int) -> dict:
+    """Uniform sample over the filled prefix (callers gate the TD update on
+    ``size >= min_replay``, so an underfilled read is never consumed)."""
+    import jax
+    import jax.numpy as jnp
+    idx = jax.random.randint(key, (batch_size,), 0,
+                             jnp.maximum(buf.size, 1))
+    return {"s": buf.s[idx], "a": buf.a[idx], "r": buf.r[idx],
+            "s_next": buf.s_next[idx], "done": buf.done[idx]}

@@ -20,3 +20,11 @@ def snapshot(platform: HMAIPlatform) -> dict:
 def compute_reward(before: dict, platform: HMAIPlatform) -> float:
     after = snapshot(platform)
     return (after["gvalue"] - before["gvalue"]) + (after["ms"] - before["ms"])
+
+
+def reward_from_states(spec, before, after):
+    """Pure dGvalue + dMS on ``platform_jax.PlatformState`` pairs — the
+    in-scan counterpart of ``compute_reward``."""
+    from repro.core.platform_jax import gvalue_state
+    return ((gvalue_state(spec, after) - gvalue_state(spec, before))
+            + (after.MS.sum() - before.MS.sum()))

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.criteria import gvalue, matching_score
 from repro.core.taxonomy import TAXONOMY, AcceleratorArch
-from repro.core.tasks import Task, TaskKind
+from repro.core.tasks import KIND_INDEX, KIND_ORDER, Task, TaskKind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,16 +126,20 @@ class HMAIPlatform:
         self.records: list[TaskRecord] = []
         self._e_scale = 1e-9   # running scale (HW-Info display)
         self._t_scale = 1e-9
+        # TaskKind x accelerator tables, built once: schedulers and the RL
+        # state vector read these instead of re-deriving per task, and the
+        # device-resident engine (platform_jax) lifts them to jnp wholesale.
+        self.exec_time_table = np.asarray(
+            [[s.exec_time(k) for k in KIND_ORDER] for s in self.specs])
+        self.energy_table = np.asarray(
+            [[s.energy(k) for k in KIND_ORDER] for s in self.specs])
         # Gvalue normalization (§6.2 "after normalization"): per-task scales
         # — mean task exec time / energy across the platform — so the T and
         # E terms of Gvalue exert per-decision pressure comparable to MS.
         # (A running-max normalization makes dT vanish as the route grows,
         # which rewards deadline-edge queueing; see DESIGN.md.)
-        kinds = list(TaskKind)
-        self.gvalue_t_scale = float(np.mean(
-            [s.exec_time(k) for s in self.specs for k in kinds]))
-        self.gvalue_e_scale = float(np.mean(
-            [s.energy(k) for s in self.specs for k in kinds]))
+        self.gvalue_t_scale = float(self.exec_time_table.mean())
+        self.gvalue_e_scale = float(self.energy_table.mean())
 
     # ------------------------------------------------------------------
     # metrics
@@ -183,7 +187,7 @@ class HMAIPlatform:
     # ------------------------------------------------------------------
 
     def exec_time(self, task: Task, accel_index: int) -> float:
-        return self.specs[accel_index].exec_time(task.kind)
+        return float(self.exec_time_table[accel_index, KIND_INDEX[task.kind]])
 
     def predicted_response(self, task: Task, accel_index: int) -> float:
         """Response time if the task were scheduled now (no commit)."""

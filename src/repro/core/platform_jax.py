@@ -1,0 +1,219 @@
+"""Device-resident HMAI platform: a JAX pytree mirror of ``HMAIPlatform``.
+
+``HMAIPlatform`` (``hmai.py``) is an event-driven queue simulator whose
+state mutates per task — one Python call, and one host<->device roundtrip
+for the RL agent, per camera frame.  This module ports that state into a
+``PlatformState`` pytree with a *pure* transition ``platform_step`` so the
+whole schedule->execute->reward loop can live inside one ``lax.scan`` (one
+device dispatch per route) and be ``jax.vmap``-ed across routes.
+
+The NumPy platform remains the reference implementation (the oracle);
+``tests/test_scan_engine.py`` holds the two paths to fp32 parity.  See
+DESIGN.md ("Device-resident platform") for the layout rationale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tasks import GOTURN_INDEX, KIND_ORDER, TaskArrays
+
+
+class PlatformSpec(NamedTuple):
+    """Static (per-platform, per-route-batch) tables; not scanned over.
+
+    ``exec_time`` / ``energy`` are the TaskKind x accelerator matrices the
+    NumPy platform caches in ``reset()`` (transposed: [n_accel, n_kinds]).
+    """
+    exec_time: jax.Array       # [n_accel, n_kinds] f32, seconds
+    energy: jax.Array          # [n_accel, n_kinds] f32, joules
+    gvalue_e_scale: jax.Array  # scalar f32 (per-task energy scale, §6.2)
+    gvalue_t_scale: jax.Array  # scalar f32 (per-task time scale)
+
+    @property
+    def n(self) -> int:
+        return self.exec_time.shape[0]
+
+
+class PlatformState(NamedTuple):
+    """The mutable half of ``HMAIPlatform`` as arrays (HW-Info, §7.2)."""
+    avail: jax.Array       # [n] next-free time per accelerator
+    busy: jax.Array        # [n] cumulative busy seconds
+    E: jax.Array           # [n] energy
+    T: jax.Array           # [n] max finish time
+    MS: jax.Array          # [n] summed Matching Score
+    R_Balance: jax.Array   # [n] running mean utilization
+    num_tasks: jax.Array   # [n] i32
+    e_scale: jax.Array     # scalar: running max total energy (HW-Info norm)
+    t_scale: jax.Array     # scalar: running max makespan
+
+
+class StepRecord(NamedTuple):
+    """Per-decision outputs of ``platform_step`` (a ``TaskRecord`` row)."""
+    action: jax.Array
+    start: jax.Array
+    finish: jax.Array
+    wait: jax.Array
+    exec_time: jax.Array
+    response: jax.Array
+    ms: jax.Array
+    energy: jax.Array
+    met: jax.Array     # response <= safety_time (STM hit)
+    valid: jax.Array   # False for padding tasks: state passed through
+
+
+def spec_from_platform(platform) -> PlatformSpec:
+    """Build the static tables from an ``HMAIPlatform`` (uses the cached
+    exec/energy tables the platform builds in ``reset()``)."""
+    return PlatformSpec(
+        exec_time=jnp.asarray(platform.exec_time_table, jnp.float32),
+        energy=jnp.asarray(platform.energy_table, jnp.float32),
+        gvalue_e_scale=jnp.float32(platform.gvalue_e_scale),
+        gvalue_t_scale=jnp.float32(platform.gvalue_t_scale),
+    )
+
+
+def spec_from_tables(exec_time: np.ndarray, energy: np.ndarray) -> PlatformSpec:
+    exec_time = jnp.asarray(exec_time, jnp.float32)
+    energy = jnp.asarray(energy, jnp.float32)
+    return PlatformSpec(
+        exec_time=exec_time, energy=energy,
+        gvalue_e_scale=jnp.float32(jnp.mean(energy)),
+        gvalue_t_scale=jnp.float32(jnp.mean(exec_time)),
+    )
+
+
+def platform_init(n: int) -> PlatformState:
+    z = jnp.zeros((n,), jnp.float32)
+    return PlatformState(
+        avail=z, busy=z, E=z, T=z, MS=z, R_Balance=z,
+        num_tasks=jnp.zeros((n,), jnp.int32),
+        e_scale=jnp.float32(1e-9), t_scale=jnp.float32(1e-9),
+    )
+
+
+def platform_step(spec: PlatformSpec, state: PlatformState, task: TaskArrays,
+                  action: jax.Array, valid=None
+                  ) -> tuple[PlatformState, StepRecord]:
+    """Pure mirror of ``HMAIPlatform.execute`` (§7.2 update formulas).
+
+    ``task`` holds scalar fields (one ``TaskArrays`` row, e.g. a scan slice).
+    When ``valid`` is False the state passes through unchanged (padding
+    row) and the record is flagged invalid.
+    """
+    if valid is None:
+        valid = task.valid
+    a = action.astype(jnp.int32)
+    kind = task.kind
+    et = spec.exec_time[a, kind]
+    en = spec.energy[a, kind]
+    start = jnp.maximum(task.arrival, state.avail[a])
+    finish = start + et
+    wait = start - task.arrival
+    response = finish - task.arrival
+    # Matching Score: GOTURN tasks are TRA (step function, Fig 7b), the
+    # detectors use the linear DET ramp (Fig 7a)
+    met = response <= task.safety
+    ms_det = jnp.where(met & (task.safety > 0),
+                       response / jnp.maximum(task.safety, 1e-12), -1.0)
+    ms_tra = jnp.where(met, 1.0, -1.0)
+    ms = jnp.where(kind == GOTURN_INDEX, ms_tra, ms_det)
+
+    avail = state.avail.at[a].set(finish)
+    busy = state.busy.at[a].add(et)
+    E = state.E.at[a].add(en)
+    T = state.T.at[a].max(finish)
+    MS = state.MS.at[a].add(ms)
+    num_tasks = state.num_tasks.at[a].add(1)
+    # paper: R_Balance_i = (r_j + R_Balance_i) / num
+    r_j = busy[a] / jnp.maximum(finish, 1e-9)
+    n = num_tasks[a].astype(jnp.float32)
+    R_Balance = state.R_Balance.at[a].set(
+        (r_j + state.R_Balance[a] * (n - 1.0)) / n)
+    new = PlatformState(
+        avail=avail, busy=busy, E=E, T=T, MS=MS, R_Balance=R_Balance,
+        num_tasks=num_tasks,
+        e_scale=jnp.maximum(state.e_scale, E.sum()),
+        t_scale=jnp.maximum(state.t_scale, T.max()),
+    )
+    new = jax.tree_util.tree_map(
+        lambda nv, ov: jnp.where(valid, nv, ov), new, state)
+    rec = StepRecord(action=a, start=start, finish=finish, wait=wait,
+                     exec_time=et, response=response, ms=ms, energy=en,
+                     met=met, valid=valid)
+    return new, rec
+
+
+# ---------------------------------------------------------------------------
+# metrics (pure mirrors of the HMAIPlatform properties)
+# ---------------------------------------------------------------------------
+
+def gvalue_state(spec: PlatformSpec, state: PlatformState) -> jax.Array:
+    """Global State Value = (-E - T + R_Balance)/3 after §6.2 normalization
+    (same formula as ``criteria.gvalue`` + ``HMAIPlatform.gvalue``)."""
+    total_e = state.E.sum()
+    makespan = state.T.max()
+    rb = state.R_Balance.mean()
+    e_scale = spec.gvalue_e_scale * jnp.maximum(
+        state.num_tasks.sum().astype(jnp.float32), 1.0)
+    e = total_e / jnp.maximum(e_scale, 1e-12)
+    t = makespan / jnp.maximum(spec.gvalue_t_scale, 1e-12)
+    return (-e - t + rb) / 3.0
+
+
+def hw_info_state(state: PlatformState, now: jax.Array) -> jax.Array:
+    """[n, 4] HW-Info = (E_i, T_i, R_Balance_i, MS_i), same reading as
+    ``HMAIPlatform.hw_info`` (T_i = backlog relative to ``now``)."""
+    return jnp.stack([
+        state.E / jnp.maximum(state.e_scale, 1e-9),
+        jnp.maximum(state.avail - now, 0.0),
+        state.R_Balance,
+        state.MS / jnp.maximum(state.num_tasks.astype(jnp.float32), 1.0),
+    ], axis=1)
+
+
+def state_vector(spec: PlatformSpec, feat_table: jax.Array,
+                 backlog_scale, state: PlatformState,
+                 task: TaskArrays) -> jax.Array:
+    """FlexAI observation for one task: Task-Info + HW-Info + exec column —
+    the array mirror of ``FlexAIAgent.state_vector``."""
+    tf = jnp.concatenate([feat_table[task.kind],
+                          jnp.asarray(task.safety, jnp.float32)[None]])
+    hw = hw_info_state(state, task.arrival)
+    backlog = jnp.log1p(hw[:, 1] / backlog_scale)
+    hw = jnp.stack([hw[:, 0], backlog, hw[:, 2], hw[:, 3],
+                    spec.exec_time[:, task.kind]], axis=1)
+    return jnp.concatenate([tf, hw.reshape(-1)])
+
+
+def summarize(spec: PlatformSpec, state: PlatformState,
+              recs: StepRecord) -> dict:
+    """Host-side summary matching ``HMAIPlatform.summary`` keys."""
+    valid = np.asarray(recs.valid, bool)
+    n_valid = int(valid.sum())
+    n = max(n_valid, 1)
+    met = int(np.asarray(recs.met)[valid].sum())
+    wait = np.asarray(recs.wait)[valid]
+    return {
+        "tasks": n_valid,
+        "makespan_s": float(jnp.max(state.T)),
+        "total_energy_j": float(jnp.sum(state.E)),
+        "r_balance": float(jnp.mean(state.R_Balance)),
+        "total_ms": float(jnp.sum(state.MS)),
+        "mean_wait_s": float(wait.mean()) if n_valid else 0.0,
+        "stm_rate": met / n,
+        "gvalue": float(gvalue_state(spec, state)),
+    }
+
+
+def kind_feature_table() -> np.ndarray:
+    """[n_kinds, 2] scaled (Amount, LayerNum) Task-Info features, matching
+    ``tasks.task_features`` — kind-dependent only, so built once."""
+    from repro.core.tasks import _model_stats
+    stats = _model_stats()
+    return np.asarray(
+        [[stats[k.value]["macs"] / 30e9, stats[k.value]["layers"] / 100.0]
+         for k in KIND_ORDER], np.float32)

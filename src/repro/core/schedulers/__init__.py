@@ -4,3 +4,5 @@ from repro.core.schedulers.ata import ATAScheduler
 from repro.core.schedulers.ga import GAScheduler
 from repro.core.schedulers.sa import SAScheduler
 from repro.core.schedulers.worst import WorstCaseScheduler, RandomScheduler
+from repro.core.schedulers.scan import (SCAN_SCHEDULERS, get_scan_scheduler,
+                                        scan_schedule)

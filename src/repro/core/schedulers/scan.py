@@ -1,0 +1,127 @@
+"""Heuristic schedulers on the device-resident array path.
+
+The per-task Python heuristics (``minmin.py``/``ata.py``/``worst.py``)
+stay as oracles; these are their pure-array twins sharing
+``platform_jax.platform_step``, so benchmark comparisons against FlexAI's
+scan engine run through the same substrate (one device dispatch per route,
+vmap-able across routes).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.platform_jax import (PlatformSpec, platform_init,
+                                     platform_step, spec_from_platform,
+                                     summarize)
+from repro.core.tasks import TaskArrays, tasks_to_arrays
+
+
+def worst_scan(spec: PlatformSpec, tasks: TaskArrays):
+    """Everything onto accelerator 0 (the unscheduled worst case)."""
+
+    def body(state, task):
+        return platform_step(spec, state, task, jnp.int32(0))
+
+    return jax.lax.scan(body, platform_init(spec.n), tasks)
+
+
+def ata_scan(spec: PlatformSpec, tasks: TaskArrays):
+    """ATA: lowest-energy accelerator meeting the safety time; fastest
+    response as the deadline-salvage fallback (mirrors ``ATAScheduler``)."""
+
+    def body(state, task):
+        resp = (jnp.maximum(task.arrival, state.avail)
+                + spec.exec_time[:, task.kind] - task.arrival)
+        feasible = resp <= task.safety
+        energy = spec.energy[:, task.kind]
+        a_feas = jnp.argmin(jnp.where(feasible, energy, jnp.inf))
+        action = jnp.where(feasible.any(), a_feas,
+                           jnp.argmin(resp)).astype(jnp.int32)
+        return platform_step(spec, state, task, action)
+
+    return jax.lax.scan(body, platform_init(spec.n), tasks)
+
+
+def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, window: int = 30):
+    """Windowed Min-Min as a nested scan.
+
+    Outer scan walks windows of ``window`` tasks; the inner scan commits
+    one (task, accelerator) pair per step — the pair with the smallest
+    completion time among unscheduled window rows, row-major tie-break like
+    the NumPy loop.  Padding rows start pre-scheduled, and an all-scheduled
+    window step degenerates to a masked no-op ``platform_step``.
+    """
+    n = spec.n
+    t = tasks.arrival.shape[0]
+    pad = -t % window
+    win = TaskArrays(*[
+        jnp.concatenate([jnp.asarray(a),
+                         jnp.zeros((pad,), jnp.asarray(a).dtype)]
+                        ).reshape(-1, window)
+        for a in tasks])
+
+    def inner(wtasks, carry, _):
+        state, scheduled = carry
+        ct = (jnp.maximum(wtasks.arrival[:, None], state.avail[None, :])
+              + spec.exec_time.T[wtasks.kind])            # [W, n]
+        ct = jnp.where(scheduled[:, None], jnp.inf, ct)
+        flat = jnp.argmin(ct)
+        ti, a = flat // n, flat % n
+        ok = ~scheduled[ti]                               # False if all done
+        task_i = jax.tree_util.tree_map(lambda x: x[ti], wtasks)
+        state2, rec = platform_step(spec, state, task_i,
+                                    a.astype(jnp.int32), valid=ok)
+        return (state2, scheduled.at[ti].set(True)), rec
+
+    def outer(state, wtasks):
+        (state, _), recs = jax.lax.scan(
+            functools.partial(inner, wtasks), (state, ~wtasks.valid),
+            None, length=window)
+        return state, recs
+
+    final, recs = jax.lax.scan(outer, platform_init(n), win)
+    recs = jax.tree_util.tree_map(lambda a: a.reshape(-1, *a.shape[2:]),
+                                  recs)
+    return final, recs
+
+
+SCAN_SCHEDULERS = {
+    "worst": worst_scan,
+    "ata": ata_scan,
+    "minmin": minmin_scan,
+}
+
+_JIT_CACHE: dict = {}
+
+
+def get_scan_scheduler(name: str, batched: bool = False):
+    """Jitted (and optionally vmapped-over-routes) scan heuristic."""
+    key = (name, batched)
+    if key not in _JIT_CACHE:
+        fn = SCAN_SCHEDULERS[name]
+        if batched:
+            fn = jax.vmap(fn, in_axes=(None, 0))
+        _JIT_CACHE[key] = jax.jit(fn)
+    return _JIT_CACHE[key]
+
+
+def scan_schedule(name: str, platform, tasks) -> dict:
+    """Convenience mirror of ``Scheduler.schedule``: same summary keys,
+    computed from one device dispatch."""
+    spec = spec_from_platform(platform)
+    ta = tasks if isinstance(tasks, TaskArrays) else tasks_to_arrays(tasks)
+    fn = get_scan_scheduler(name)
+    t0 = time.perf_counter()
+    final, recs = fn(spec, ta)
+    jax.block_until_ready(final)
+    dt = time.perf_counter() - t0
+    summ = summarize(spec, final, recs)
+    summ["schedule_time_s"] = dt
+    summ["schedule_time_per_task_s"] = dt / max(ta.num_tasks, 1)
+    import numpy as np
+    summ["placements"] = np.asarray(recs.action)
+    return summ

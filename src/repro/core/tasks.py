@@ -10,12 +10,22 @@ from __future__ import annotations
 import dataclasses
 import enum
 from functools import lru_cache
+from typing import NamedTuple
 
 
 class TaskKind(enum.Enum):
     YOLO = "yolo"      # DET, small/medium objects
     SSD = "ssd"        # DET, large objects
     GOTURN = "goturn"  # TRA
+
+
+# canonical integer encoding shared by the NumPy platform's cached tables
+# and the device-resident scan engine (``platform_jax``)
+KIND_ORDER = tuple(TaskKind)
+KIND_INDEX = {k: i for i, k in enumerate(KIND_ORDER)}
+GOTURN_INDEX = KIND_INDEX[TaskKind.GOTURN]
+GROUP_ORDER = ("FC", "FLSC", "RLSC", "FRSC", "RRSC", "RC")
+GROUP_INDEX = {g: i for i, g in enumerate(GROUP_ORDER)}
 
 
 @lru_cache(maxsize=1)
@@ -47,3 +57,66 @@ def task_features(task: Task) -> tuple[float, float, float]:
     """Task-Info vector for the RL agent: (Amount, LayerNum, safety_time),
     scaled to O(1) ranges."""
     return (task.amount / 30e9, task.layer_num / 100.0, task.safety_time)
+
+
+# ---------------------------------------------------------------------------
+# struct-of-arrays form (the "precompiled" queue fed to lax.scan engines)
+# ---------------------------------------------------------------------------
+
+class TaskArrays(NamedTuple):
+    """A task queue as parallel arrays, [T] each (or scalars inside a scan
+    body).  ``valid`` marks real tasks; padding rows (added so routes share
+    a static shape for jit/vmap) carry valid=False and leave the platform
+    state untouched."""
+    kind: "object"      # [T] i32, KIND_INDEX encoding
+    arrival: "object"   # [T] f32 seconds
+    safety: "object"    # [T] f32 seconds
+    group: "object"     # [T] i32, GROUP_INDEX encoding
+    valid: "object"     # [T] bool
+
+    @property
+    def num_tasks(self) -> int:
+        return int(self.arrival.shape[-1])
+
+
+def tasks_to_arrays(tasks: list) -> TaskArrays:
+    """Precompile a ``Task`` list into struct-of-arrays form (one-time host
+    cost; after this the queue never leaves the device)."""
+    import numpy as np
+    return TaskArrays(
+        kind=np.asarray([KIND_INDEX[t.kind] for t in tasks], np.int32),
+        arrival=np.asarray([t.arrival_time for t in tasks], np.float32),
+        safety=np.asarray([t.safety_time for t in tasks], np.float32),
+        group=np.asarray([GROUP_INDEX[t.camera_group] for t in tasks],
+                         np.int32),
+        valid=np.ones(len(tasks), bool),
+    )
+
+
+def pad_task_arrays(ta: TaskArrays, to_len: int) -> TaskArrays:
+    """Right-pad with invalid rows to a static length (shape bucketing)."""
+    import numpy as np
+    n = ta.arrival.shape[0]
+    if to_len < n:
+        raise ValueError(f"cannot pad {n} tasks down to {to_len}")
+    if to_len == n:
+        return ta
+    pad = to_len - n
+
+    def ext(a, fill):
+        return np.concatenate(
+            [np.asarray(a), np.full((pad,), fill, np.asarray(a).dtype)])
+
+    return TaskArrays(kind=ext(ta.kind, 0), arrival=ext(ta.arrival, 0.0),
+                      safety=ext(ta.safety, 1.0), group=ext(ta.group, 0),
+                      valid=ext(ta.valid, False))
+
+
+def stack_task_arrays(routes: list) -> TaskArrays:
+    """Stack per-route ``TaskArrays`` into a [R, T_max] batch for vmap,
+    padding every route to the longest."""
+    import numpy as np
+    t_max = max(r.arrival.shape[0] for r in routes)
+    padded = [pad_task_arrays(r, t_max) for r in routes]
+    return TaskArrays(*[np.stack([getattr(p, f) for p in padded])
+                        for f in TaskArrays._fields])

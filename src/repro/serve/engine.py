@@ -60,6 +60,67 @@ class Request:
     done: bool = False
 
 
+class FlexAIPlacementService:
+    """Multi-vehicle placement serving on the device-resident scheduler.
+
+    Each request is one vehicle's task queue (a route, or a camera-burst
+    window of it).  Queues are precompiled to ``TaskArrays``, right-padded
+    to power-of-two length buckets, stacked per bucket, and dispatched
+    through the vmapped greedy ``schedule_scan`` — one device call per
+    (bucket, batch-size) shape, compiled executables cached across calls.
+    This is the serving analogue of the engine's training batcher: the
+    per-frame Python loop never runs on the request path.
+    """
+
+    def __init__(self, platform, params, *, backlog_scale: float = 1.0,
+                 min_bucket: int = 64):
+        from repro.core.flexai.engine import make_schedule_fn
+        from repro.core.platform_jax import spec_from_platform
+        self.spec = spec_from_platform(platform)
+        self.params = params
+        self.backlog_scale = backlog_scale
+        self.min_bucket = min_bucket
+        self._batched_fn = make_schedule_fn(self.spec, backlog_scale,
+                                            batched=True)
+        self.dispatches = 0
+
+    def _bucket(self, n: int) -> int:
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return b
+
+    def place(self, queues: list) -> list[dict]:
+        """Schedule every queue; returns one summary dict per queue with
+        ``placements`` trimmed to the queue's real length."""
+        from repro.core.platform_jax import summarize
+        from repro.core.tasks import (TaskArrays, pad_task_arrays,
+                                      stack_task_arrays, tasks_to_arrays)
+        arrays = [q if isinstance(q, TaskArrays) else tasks_to_arrays(q)
+                  for q in queues]
+        by_bucket: dict = {}
+        for i, ta in enumerate(arrays):
+            by_bucket.setdefault(self._bucket(ta.num_tasks), []).append(i)
+        results: list = [None] * len(arrays)
+        for bucket, idxs in sorted(by_bucket.items()):
+            batch = stack_task_arrays(
+                [pad_task_arrays(arrays[i], bucket) for i in idxs])
+            out = self._batched_fn(self.params, batch)
+            # one device->host transfer per bucket, then NumPy slicing —
+            # per-lane device gathers would issue hundreds of tiny
+            # blocking transfers on the serving hot path
+            finals, recs = jax.device_get(out)
+            self.dispatches += 1
+            for lane, i in enumerate(idxs):
+                take = jax.tree_util.tree_map(lambda a, l=lane: a[l],
+                                              (finals, recs))
+                summ = summarize(self.spec, take[0], take[1])
+                summ["placements"] = take[1].action[: arrays[i].num_tasks]
+                summ["bucket"] = bucket
+                results[i] = summ
+        return results
+
+
 class ServeEngine:
     """Wave-based batched serving with a static decode shape.
 

@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
+module skips cleanly when it isn't installed so ``pytest -x -q`` still
+collects the rest of the suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.criteria import (gvalue, matching_score_det,
                                  matching_score_tra, rss_safe_distance,

@@ -1,0 +1,260 @@
+"""Scan/loop parity: the device-resident engine (platform_jax + flexai
+engine + scan schedulers) must reproduce the NumPy oracle path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.environment import EnvironmentParams, build_task_queue
+from repro.core.flexai import FlexAIAgent, FlexAIConfig, ScanFlexAI
+from repro.core.flexai.engine import make_schedule_fn
+from repro.core.hmai import HMAIPlatform
+from repro.core.platform_jax import (platform_init, platform_step,
+                                     spec_from_platform, summarize)
+from repro.core.schedulers import get_scheduler, scan_schedule
+from repro.core.tasks import (Task, TaskKind, pad_task_arrays,
+                              stack_task_arrays, tasks_to_arrays)
+
+RS = 0.05
+
+
+def _queue(seed, km=0.06):
+    return build_task_queue(EnvironmentParams(
+        route_km=km, rate_scale=RS, seed=seed, max_times_turn=2,
+        max_times_reverse=1, max_duration_turn=4.0,
+        max_duration_reverse=6.0))
+
+
+def _platform():
+    return HMAIPlatform(capacity_scale=RS)
+
+
+# ---------------------------------------------------------------------------
+# platform_step vs HMAIPlatform.execute
+# ---------------------------------------------------------------------------
+
+def test_platform_step_matches_execute():
+    rng = np.random.default_rng(0)
+    plat = _platform()
+    spec = spec_from_platform(plat)
+    state = platform_init(plat.n)
+    step = jax.jit(platform_step)
+    t = 0.0
+    for uid in range(120):
+        t += float(rng.uniform(0, 0.005))
+        kind = [TaskKind.YOLO, TaskKind.SSD, TaskKind.GOTURN][uid % 3]
+        task = Task(uid=uid, kind=kind, camera_group="FC", camera_id=0,
+                    arrival_time=t, safety_time=0.05)
+        a = int(rng.integers(0, plat.n))
+        rec_np = plat.execute(task, a)
+        ta = tasks_to_arrays([task])
+        row = jax.tree_util.tree_map(lambda x: x[0], ta)
+        state, rec = step(spec, state, row, np.int32(a))
+        np.testing.assert_allclose(float(rec.response),
+                                   rec_np.response_time, rtol=1e-5)
+        np.testing.assert_allclose(float(rec.ms), rec_np.ms, rtol=1e-5)
+        np.testing.assert_allclose(float(rec.energy), rec_np.energy,
+                                   rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.avail), plat.avail,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.E), plat.E, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.T), plat.T, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.MS), plat.MS, rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.R_Balance), plat.R_Balance,
+                               rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(state.num_tasks),
+                                  plat.num_tasks)
+
+
+# ---------------------------------------------------------------------------
+# greedy inference parity (the ISSUE-1 acceptance test)
+# ---------------------------------------------------------------------------
+
+def test_schedule_scan_parity_with_loop():
+    """Same weights -> same placements, STM rate and Gvalue as the Python
+    loop, to fp32 tolerance."""
+    q = _queue(7)
+    assert len(q) > 200
+    agent = FlexAIAgent(_platform(), FlexAIConfig(seed=3))
+
+    p_loop = _platform()
+    loop = agent.schedule(p_loop, q)
+    loop_placements = np.asarray([r.accel_index for r in p_loop.records])
+
+    scan = agent.schedule_scan(_platform(), q)
+
+    np.testing.assert_array_equal(scan["placements"], loop_placements)
+    assert scan["stm_rate"] == pytest.approx(loop["stm_rate"], abs=1e-6)
+    assert scan["gvalue"] == pytest.approx(loop["gvalue"], rel=1e-4)
+    assert scan["makespan_s"] == pytest.approx(loop["makespan_s"], rel=1e-4)
+    assert scan["total_energy_j"] == pytest.approx(loop["total_energy_j"],
+                                                   rel=1e-4)
+    assert scan["total_ms"] == pytest.approx(loop["total_ms"], rel=1e-3)
+
+
+@pytest.mark.parametrize("name", ["worst", "ata", "minmin"])
+def test_heuristic_scan_parity(name):
+    q = _queue(11)
+    loop = get_scheduler(name).schedule(_platform(), q)
+    scan = scan_schedule(name, _platform(), q)
+    assert scan["tasks"] == loop["tasks"] == len(q)
+    assert scan["stm_rate"] == pytest.approx(loop["stm_rate"], abs=5e-3)
+    assert scan["makespan_s"] == pytest.approx(loop["makespan_s"], rel=1e-3)
+    assert scan["total_energy_j"] == pytest.approx(loop["total_energy_j"],
+                                                   rel=2e-3)
+    assert scan["r_balance"] == pytest.approx(loop["r_balance"], abs=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-route batching
+# ---------------------------------------------------------------------------
+
+def test_vmap_batch_matches_single_route():
+    routes = [tasks_to_arrays(_queue(s)) for s in (1, 2)]
+    plat = _platform()
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=5))
+    spec = spec_from_platform(plat)
+    params = agent.learner.eval_p
+
+    single = make_schedule_fn(spec, agent.cfg.backlog_scale)
+    batched = make_schedule_fn(spec, agent.cfg.backlog_scale, batched=True)
+    batch = stack_task_arrays(routes)
+    finals_b, recs_b = batched(params, batch)
+
+    for lane, ta in enumerate(routes):
+        final_s, recs_s = single(params, ta)
+        n = ta.num_tasks
+        np.testing.assert_array_equal(
+            np.asarray(recs_b.action)[lane, :n],
+            np.asarray(recs_s.action))
+        np.testing.assert_allclose(
+            np.asarray(jax.tree_util.tree_map(lambda a: a[lane],
+                                              finals_b).T),
+            np.asarray(final_s.T), rtol=1e-5)
+
+
+def test_padding_is_noop():
+    """Invalid rows must leave the platform state untouched."""
+    ta = tasks_to_arrays(_queue(4))
+    plat = _platform()
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=1))
+    spec = spec_from_platform(plat)
+    fn = make_schedule_fn(spec, agent.cfg.backlog_scale)
+    final_a, recs_a = fn(agent.learner.eval_p, ta)
+    padded = pad_task_arrays(ta, ta.num_tasks + 37)
+    final_b, recs_b = fn(agent.learner.eval_p, padded)
+    for a, b in zip(final_a, final_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert not np.asarray(recs_b.valid)[ta.num_tasks:].any()
+    s_a = summarize(spec, final_a, recs_a)
+    s_b = summarize(spec, final_b, recs_b)
+    assert s_a["tasks"] == s_b["tasks"]
+    assert s_a["stm_rate"] == pytest.approx(s_b["stm_rate"], abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fused training episode
+# ---------------------------------------------------------------------------
+
+def test_train_episode_scan_smoke():
+    q = _queue(21, km=0.03)
+    cfg = FlexAIConfig(min_replay=32, batch_size=16, update_every=2,
+                       eps_decay_steps=500, replay_capacity=4096, seed=2)
+    trainer = ScanFlexAI(_platform(), cfg)
+    summ = trainer.train_episode(q)
+    assert summ["tasks"] == len(q)
+    assert 0.0 <= summ["stm_rate"] <= 1.0
+    assert int(trainer.ts.env_steps) == len(q)
+    assert int(trainer.ts.replay.size) == min(len(q), 4096)
+    assert trainer.losses and np.isfinite(trainer.losses).all()
+    assert summ["mean_loss"] is not None
+    # counters persist across episodes (epsilon keeps decaying)
+    trainer.train_episode(q)
+    assert int(trainer.ts.env_steps) == 2 * len(q)
+
+
+def test_schedule_scan_cache_not_shared_across_platforms():
+    """Two platforms with equal n but different hardware tables must not
+    reuse one compiled closure (regression: cache keyed only on n)."""
+    q = _queue(17, km=0.03)
+    agent = FlexAIAgent(_platform(), FlexAIConfig(seed=9))
+    p_fast = HMAIPlatform(capacity_scale=RS)
+    p_slow = HMAIPlatform(capacity_scale=RS / 4)
+    assert p_fast.n == p_slow.n
+    agent.schedule_scan(p_fast, q)  # populate the cache
+    scan = agent.schedule_scan(p_slow, q)
+    p_ref = HMAIPlatform(capacity_scale=RS / 4)
+    loop = agent.schedule(p_ref, q)
+    assert scan["makespan_s"] == pytest.approx(loop["makespan_s"], rel=1e-4)
+    np.testing.assert_array_equal(
+        scan["placements"], [r.accel_index for r in p_ref.records])
+
+
+def test_train_episode_padded_route_matches_unpadded():
+    """Padding rows must not shift the terminal transition: the replay
+    ring holds exactly one done=1 row per episode either way."""
+    q = _queue(23, km=0.02)
+    cfg = FlexAIConfig(min_replay=32, batch_size=16, update_every=4,
+                       eps_decay_steps=500, replay_capacity=4096, seed=8)
+    plain = ScanFlexAI(_platform(), cfg)
+    plain.train_episode(tasks_to_arrays(q))
+    padded = ScanFlexAI(_platform(), cfg)
+    padded.train_episode(pad_task_arrays(tasks_to_arrays(q), len(q) + 50))
+    assert int(plain.ts.env_steps) == int(padded.ts.env_steps) == len(q)
+    assert int(plain.ts.replay.size) == int(padded.ts.replay.size)
+    for tr in (plain, padded):
+        done = np.asarray(tr.ts.replay.done)[: int(tr.ts.replay.size)]
+        assert done.sum() == pytest.approx(1.0)
+
+
+def test_train_vmapped_lanes_smoke():
+    routes = [_queue(31, km=0.03), _queue(32, km=0.03)]
+    cfg = FlexAIConfig(min_replay=32, batch_size=16, update_every=4,
+                       eps_decay_steps=500, replay_capacity=2048, seed=4)
+    trainer = ScanFlexAI(_platform(), cfg, lanes=2)
+    out = trainer.train(routes, episodes=1)[0]  # round-robins lanes
+    assert len(out["lanes"]) == 2
+    for lane in out["lanes"]:
+        assert 0.0 <= lane["stm_rate"] <= 1.0
+    # lanes are independent seeds: EvalNet weights must differ
+    w0 = np.asarray(trainer.ts.eval_p.w1)[0]
+    w1 = np.asarray(trainer.ts.eval_p.w1)[1]
+    assert not np.allclose(w0, w1)
+    # greedy schedule from a trained lane works
+    s = trainer.schedule(routes[0], lane=1)
+    assert s["tasks"] == len(routes[0])
+
+
+# ---------------------------------------------------------------------------
+# serving path
+# ---------------------------------------------------------------------------
+
+def test_placement_service_buckets_and_trims():
+    from repro.serve.engine import FlexAIPlacementService
+    plat = _platform()
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=6))
+    svc = FlexAIPlacementService(plat, agent.learner.eval_p, min_bucket=64)
+    queues = [_queue(41, km=0.02), _queue(42, km=0.03), _queue(43, km=0.02)]
+    results = svc.place(queues)
+    assert len(results) == len(queues)
+    for q, r in zip(queues, results):
+        assert r["tasks"] == len(q)
+        assert r["placements"].shape == (len(q),)
+        assert r["bucket"] >= len(q)
+    # same-bucket queues share a dispatch
+    assert svc.dispatches == len({r["bucket"] for r in results})
+
+
+# ---------------------------------------------------------------------------
+# cached exec-time table (satellite)
+# ---------------------------------------------------------------------------
+
+def test_exec_time_table_matches_specs():
+    plat = _platform()
+    from repro.core.tasks import KIND_ORDER
+    for i, spec in enumerate(plat.specs):
+        for j, kind in enumerate(KIND_ORDER):
+            assert plat.exec_time_table[i, j] == pytest.approx(
+                spec.exec_time(kind))
+            assert plat.energy_table[i, j] == pytest.approx(
+                spec.energy(kind))
