@@ -1,0 +1,111 @@
+"""Version-adaptive JAX compatibility seam.
+
+The repo targets the newest public JAX API surface (``jax.shard_map``,
+``jax.make_mesh(axis_types=...)``, ``pltpu.CompilerParams``); CI and the
+baked container run jax 0.4.37, where those names live elsewhere or do not
+exist yet.  Every version-sensitive symbol is resolved HERE, once, at import
+time — call sites import from ``repro.compat`` and never probe ``jax``
+themselves.
+
+Shimmed surface (see DESIGN.md "Compat-shim policy" for the drop rules):
+
+=====================  ====================================================
+export                 resolves to
+=====================  ====================================================
+``shard_map``          ``jax.shard_map`` (>= 0.6) else
+                       ``jax.experimental.shard_map.shard_map``
+``make_mesh``          ``jax.make_mesh`` with ``axis_types`` forwarded when
+                       supported, silently dropped otherwise
+``abstract_mesh``      ``jax.sharding.AbstractMesh`` under both calling
+                       conventions: ``(shape, names)`` (new) vs the 0.4.x
+                       ``((name, size), ...)`` shape-tuple
+``default_axis_types`` ``(jax.sharding.AxisType.Auto,) * n`` when
+                       ``AxisType`` exists, else ``None``
+``CompilerParams``     ``pltpu.CompilerParams`` (>= 0.6) else
+                       ``pltpu.TPUCompilerParams``
+``pallas_interpret_default``  True off-TPU (Pallas kernels fall back to
+                       interpret mode so CPU CI executes the kernel bodies)
+=====================  ====================================================
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                     # jax >= 0.6
+    shard_map = jax.shard_map
+else:                                             # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def default_axis_types(n_axes: int):
+    """``(AxisType.Auto,) * n`` on new JAX, ``None`` where the enum does not
+    exist (0.4.x meshes are implicitly Auto)."""
+    if HAS_AXIS_TYPE:
+        return (jax.sharding.AxisType.Auto,) * n_axes
+    return None
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates pre-``axis_types`` JAX.
+
+    ``axis_types=None`` asks for the default (Auto on every axis); on old
+    JAX the kwarg is dropped entirely, which means the same thing.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = default_axis_types(len(tuple(axis_names)))
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` under either calling convention.
+
+    New JAX: ``AbstractMesh(axis_shapes, axis_names)``.  0.4.x:
+    ``AbstractMesh(shape_tuple)`` with ``((name, size), ...)`` pairs.
+    """
+    AbstractMesh = jax.sharding.AbstractMesh
+    params = list(inspect.signature(AbstractMesh.__init__).parameters)
+    if "axis_names" in params or "axis_name" in params:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU
+# ---------------------------------------------------------------------------
+
+def __getattr__(name):
+    # ``CompilerParams`` resolves lazily so non-kernel consumers of this
+    # module (sharding, serving, launch) never pay the Pallas/Mosaic
+    # import at startup.  jax >= 0.6 renamed TPUCompilerParams ->
+    # CompilerParams; accept either.
+    if name == "CompilerParams":
+        from jax.experimental.pallas import tpu as _pltpu
+        return getattr(_pltpu, "CompilerParams", None) \
+            or _pltpu.TPUCompilerParams
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def pallas_interpret_default() -> bool:
+    """Pallas kernels compile (Mosaic) only on TPU; everywhere else default
+    to interpret mode so the same call sites run under CPU CI."""
+    return jax.devices()[0].platform != "tpu"

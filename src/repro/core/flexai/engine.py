@@ -45,14 +45,9 @@ from repro.core.tasks import TaskArrays, stack_task_arrays, tasks_to_arrays
 # greedy inference
 # ---------------------------------------------------------------------------
 
-def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
-                     batched: bool = False):
-    """Compile the greedy scheduler.
-
-    Returns ``fn(params, tasks) -> (final_state, records)``; with
-    ``batched=True`` the tasks carry a leading route axis [R, T] and the
-    params are shared across routes.
-    """
+def _schedule_run(spec: PlatformSpec, backlog_scale: float):
+    """Un-jitted single-route greedy episode: the shared core that the
+    jitted, vmapped and shard_mapped entry points all wrap."""
     feat = jnp.asarray(kind_feature_table())
 
     def body(params, state, task):
@@ -65,9 +60,44 @@ def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
                                    platform_init(spec.n), tasks)
         return final, recs
 
+    return run
+
+
+def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
+                     batched: bool = False):
+    """Compile the greedy scheduler.
+
+    Returns ``fn(params, tasks) -> (final_state, records)``; with
+    ``batched=True`` the tasks carry a leading route axis [R, T] and the
+    params are shared across routes.
+    """
+    run = _schedule_run(spec, backlog_scale)
     if batched:
         run = jax.vmap(run, in_axes=(None, 0))
     return jax.jit(run)
+
+
+def make_sharded_schedule_fn(spec: PlatformSpec, mesh,
+                             backlog_scale: float = 1.0,
+                             axis: str = "routes"):
+    """Compile the multi-device greedy scheduler: the vmapped route batch
+    is split over ``mesh``'s ``axis`` with ``shard_map``, one independent
+    scan per device over its local routes.
+
+    Params replicate; the [R, T] task batch shards on the route axis, so R
+    must be a multiple of the mesh size (``tasks.pad_route_batch``).  No
+    collectives are involved — routes are independent — which is why the
+    engine scales linearly until the per-device lane width stops covering
+    the scan-step overhead.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    run = jax.vmap(_schedule_run(spec, backlog_scale), in_axes=(None, 0))
+    sharded = shard_map(run, mesh=mesh, in_specs=(P(), P(axis)),
+                        out_specs=P(axis))
+    return jax.jit(sharded)
 
 
 # ---------------------------------------------------------------------------
@@ -98,15 +128,9 @@ def train_init(key, state_dim: int, n_actions: int,
     )
 
 
-def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
-    """Compile the fused training episode for a ``FlexAIConfig``-shaped
-    ``cfg`` (gamma, lr, batch_size, min_replay, target_sync_every,
-    eps_start/end/decay_steps, update_every, backlog_scale).
-
-    Returns ``fn(train_state, tasks) -> (train_state, platform_state,
-    records, losses, update_mask)``.  ``batched=True`` vmaps over lanes:
-    stacked TrainState (independent seeds) x stacked routes.
-    """
+def _train_run(spec: PlatformSpec, cfg):
+    """Un-jitted single-lane fused training episode (see
+    :func:`make_train_fn` for the contract)."""
     feat = jnp.asarray(kind_feature_table())
     n_actions = spec.n
 
@@ -176,11 +200,44 @@ def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
             body, (ts, platform_init(spec.n)), (tasks, nxt, done))
         return ts_f, plat_f, recs, losses, upd_mask
 
+    return run
+
+
+def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
+    """Compile the fused training episode for a ``FlexAIConfig``-shaped
+    ``cfg`` (gamma, lr, batch_size, min_replay, target_sync_every,
+    eps_start/end/decay_steps, update_every, backlog_scale).
+
+    Returns ``fn(train_state, tasks) -> (train_state, platform_state,
+    records, losses, update_mask)``.  ``batched=True`` vmaps over lanes:
+    stacked TrainState (independent seeds) x stacked routes.
+    """
     # note: no buffer donation — at init eval_p and targ_p alias the same
     # arrays, and donating an aliased pytree is an XLA error
+    run = _train_run(spec, cfg)
     if batched:
         run = jax.vmap(run, in_axes=(0, 0))
     return jax.jit(run)
+
+
+def make_sharded_train_fn(spec: PlatformSpec, cfg, mesh,
+                          axis: str = "routes"):
+    """Compile the multi-device fused training episode: stacked lanes
+    (TrainState x routes) shard over ``mesh``'s ``axis``, each device
+    training its local lanes' independent agents in one scan.
+
+    The lane count must be a multiple of the mesh size.  Lanes never
+    communicate (independent seeds, per-lane replay rings), so this is the
+    population-training analogue of :func:`make_sharded_schedule_fn`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    run = jax.vmap(_train_run(spec, cfg), in_axes=(0, 0))
+    sharded = shard_map(run, mesh=mesh, in_specs=(P(axis), P(axis)),
+                        out_specs=P(axis))
+    return jax.jit(sharded)
 
 
 # ---------------------------------------------------------------------------
@@ -190,14 +247,19 @@ def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
 class ScanFlexAI:
     """FlexAI with the device-resident engine: ``FlexAIAgent``'s surface
     (train over queues, greedy schedule, weight export) at one device
-    dispatch per route — or per route *batch* with ``lanes > 1``."""
+    dispatch per route — or per route *batch* with ``lanes > 1``.
 
-    def __init__(self, platform, cfg, lanes: int = 1):
+    With ``mesh`` (a 1-D device mesh), the lane batch is sharded over the
+    mesh: each device trains ``lanes / mesh.size`` independent agents.
+    """
+
+    def __init__(self, platform, cfg, lanes: int = 1, mesh=None):
         self.cfg = cfg
         self.spec = spec_from_platform(platform)
         self.n_actions = platform.n
         self.state_dim = 3 + 5 * platform.n
         self.lanes = lanes
+        self.mesh = mesh
         key = jax.random.PRNGKey(cfg.seed)
         if lanes == 1:
             self.ts = train_init(key, self.state_dim, self.n_actions,
@@ -207,7 +269,19 @@ class ScanFlexAI:
                 lambda k: train_init(k, self.state_dim, self.n_actions,
                                      cfg.replay_capacity)
             )(jax.random.split(key, lanes))
-        self._train_fn = make_train_fn(self.spec, cfg, batched=lanes > 1)
+        if mesh is not None:
+            # lanes == 1 keeps an unstacked TrainState, which the vmapped
+            # sharded runner cannot consume — and a sharded single lane is
+            # pointless anyway
+            if lanes < 2 or lanes % mesh.size:
+                raise ValueError(
+                    f"lanes={lanes} must be >= 2 and a multiple of the "
+                    f"mesh size {mesh.size} (omit mesh for single-lane)")
+            self._train_fn = make_sharded_train_fn(self.spec, cfg, mesh,
+                                                   axis=mesh.axis_names[0])
+        else:
+            self._train_fn = make_train_fn(self.spec, cfg,
+                                           batched=lanes > 1)
         self._sched_fn = make_schedule_fn(self.spec, cfg.backlog_scale)
         self.losses: list[float] = []
 

@@ -120,3 +120,36 @@ def stack_task_arrays(routes: list) -> TaskArrays:
     padded = [pad_task_arrays(r, t_max) for r in routes]
     return TaskArrays(*[np.stack([getattr(p, f) for p in padded])
                         for f in TaskArrays._fields])
+
+
+def invalid_task_arrays(length: int) -> TaskArrays:
+    """An all-padding route: every row carries ``valid=False`` so the scan
+    engine passes the platform state through untouched."""
+    import numpy as np
+    return TaskArrays(
+        kind=np.zeros((length,), np.int32),
+        arrival=np.zeros((length,), np.float32),
+        safety=np.ones((length,), np.float32),
+        group=np.zeros((length,), np.int32),
+        valid=np.zeros((length,), bool),
+    )
+
+
+def pad_route_batch(batch: TaskArrays, multiple: int) -> TaskArrays:
+    """Pad the leading route axis of a [R, T] batch to a multiple of
+    ``multiple`` with all-invalid routes.
+
+    This is what makes the sharded engine device-count-agnostic: any route
+    batch can be split evenly over however many devices the mesh has, and
+    the padding lanes cost one no-op scan each.
+    """
+    import numpy as np
+    r, t = batch.arrival.shape
+    pad = (-r) % multiple
+    if pad == 0:
+        return batch
+    inv = invalid_task_arrays(t)
+    return TaskArrays(*[
+        np.concatenate(
+            [np.asarray(b), np.broadcast_to(f, (pad, t)).copy()])
+        for b, f in zip(batch, inv)])

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int):
     ci_step = pl.program_id(2)
@@ -74,7 +76,7 @@ def mconv_mc(x: jax.Array, w: jax.Array, *, cout_tile: int = 128,
                                lambda b, co, ci: (b, 0, 0, co)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
         scratch_shapes=[pltpu.VMEM((ho, wo, cout_tile), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="mconv_mc",

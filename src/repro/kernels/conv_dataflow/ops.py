@@ -11,16 +11,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import pallas_interpret_default
 from repro.kernels.conv_dataflow.mconv_mc import mconv_mc
 from repro.kernels.conv_dataflow.ref import conv2d_ref
 from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
 from repro.kernels.conv_dataflow.sconv_od import sconv_od
 
 DATAFLOWS = ("SconvOD", "SconvIC", "MconvMC")
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
 
 
 def _tile(n: int, target: int) -> int:
@@ -40,7 +37,7 @@ def conv2d(x: jax.Array, w: jax.Array, *, dataflow: str = "MconvMC",
     x [N,H,W,Cin], w [KH,KW,Cin,Cout].
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = pallas_interpret_default()
     kh, kw, cin, cout = w.shape
     if padding == "SAME":
         ph, pw = (kh - 1) // 2, (kw - 1) // 2

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, cin: int,
             row_tile: int):
@@ -65,7 +67,7 @@ def sconv_ic(x: jax.Array, w: jax.Array, *, row_tile: int = 8,
         out_specs=pl.BlockSpec((None, row_tile, wo, cout),
                                lambda b, r: (b, r, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="sconv_ic",

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int, cin_tile: int):
     ci_step = pl.program_id(1)
@@ -74,7 +76,7 @@ def sconv_od(x: jax.Array, w: jax.Array, *, cin_tile: int = 8,
                                lambda b, c: (b, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
         scratch_shapes=[pltpu.VMEM((ho, wo, cout), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="sconv_od",

@@ -7,11 +7,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.compat import pallas_interpret_default
 from repro.kernels.flash_attention.kernel import flash_attention_flat
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -22,7 +19,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     interpret: bool | None = None) -> jax.Array:
     """q [B,Sq,H,D]; k/v [B,Skv,K,D] with K dividing H (GQA broadcast)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = pallas_interpret_default()
     b, sq, h, d = q.shape
     skv, kh = k.shape[1], k.shape[2]
     if kh != h:

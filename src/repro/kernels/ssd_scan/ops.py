@@ -6,11 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.compat import pallas_interpret_default
 from repro.kernels.ssd_scan.kernel import ssd_scan_flat
-
-
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -21,7 +18,7 @@ def ssd_scan(u: jax.Array, a: jax.Array, Bm: jax.Array, Cm: jax.Array, *,
     Returns (y [B,S,H,P], final_state [B,H,N,P]).
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = pallas_interpret_default()
     b, s, h, p = u.shape
     n = Bm.shape[-1]
     uf = u.transpose(0, 2, 1, 3).reshape(b * h, s, p)

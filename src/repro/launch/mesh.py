@@ -4,17 +4,22 @@
 this module never touches jax device state.  The dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; tests and benchmarks see the real (1-device) platform.
+
+Mesh construction goes through ``repro.compat.make_mesh``: on new JAX every
+axis is explicitly ``AxisType.Auto``; on 0.4.x (no ``AxisType``) the kwarg
+is dropped, which means the same thing.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
@@ -25,5 +30,4 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
         raise RuntimeError(
             f"need {n} devices; run under XLA_FLAGS="
             f"--xla_force_host_platform_device_count={n}")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

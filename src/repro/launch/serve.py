@@ -1,7 +1,13 @@
-"""Serving launcher: batched wave serving of a smoke-config model.
+"""Serving launcher: batched wave serving of a smoke-config model, or —
+with ``--placement`` — FlexAI multi-vehicle placement serving on the
+(optionally sharded) device-resident scheduler.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
         --requests 8 --max-new 16
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --placement --shard \
+        --routes 8 --route-km 0.03
 """
 from __future__ import annotations
 
@@ -14,21 +20,11 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.api import model_api
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import FlexAIPlacementService, Request, ServeEngine
 from repro.sharding import unbox
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=64)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args(argv)
-
+def run_token_serving(args) -> int:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.is_encoder_decoder:
         print("serve launcher currently targets decoder-only archs")
@@ -53,6 +49,73 @@ def main(argv=None) -> int:
     for r in eng.finished[:3]:
         print(f"  req {r.uid}: {r.generated[:8]}...")
     return 0
+
+
+def run_placement_serving(args) -> int:
+    """Each request is one vehicle's route; placements come from the
+    device-resident scan engine, sharded over all visible devices with
+    ``--shard`` (run under ``--xla_force_host_platform_device_count=N``
+    on CPU)."""
+    from repro.compat import make_mesh
+    from repro.core.environment import EnvironmentParams, build_task_queue
+    from repro.core.flexai import FlexAIAgent, FlexAIConfig
+    from repro.core.hmai import HMAIPlatform
+
+    plat = HMAIPlatform(capacity_scale=args.rate_scale)
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=args.seed))
+    if args.weights:
+        agent.load_weights(args.weights)
+
+    mesh = None
+    if args.shard:
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("routes",))
+        print(f"placement mesh: {n_dev} device(s) on axis 'routes'")
+    svc = FlexAIPlacementService(plat, agent.learner.eval_p,
+                                 min_bucket=args.min_bucket, mesh=mesh)
+
+    queues = [build_task_queue(EnvironmentParams(
+        route_km=args.route_km, rate_scale=args.rate_scale,
+        seed=args.seed + i)) for i in range(args.routes)]
+    n_tasks = sum(len(q) for q in queues)
+    t0 = time.perf_counter()
+    results = svc.place(queues)
+    dt = time.perf_counter() - t0
+    stm = float(np.mean([r["stm_rate"] for r in results]))
+    print(f"placed {len(queues)} routes / {n_tasks} tasks in {dt:.2f}s "
+          f"({n_tasks/dt:.0f} tasks/s, {svc.dispatches} dispatches, "
+          f"mean stm_rate {stm:.3f})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # FlexAI placement serving
+    ap.add_argument("--placement", action="store_true",
+                    help="serve FlexAI route placements instead of tokens")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the placement engine over all devices")
+    ap.add_argument("--routes", type=int, default=8)
+    ap.add_argument("--route-km", type=float, default=0.03)
+    ap.add_argument("--rate-scale", type=float, default=0.05)
+    ap.add_argument("--min-bucket", type=int, default=64)
+    ap.add_argument("--weights", type=str, default=None,
+                    help="npz of trained EvalNet weights")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.placement:
+        return run_placement_serving(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --placement is given")
+    return run_token_serving(args)
 
 
 if __name__ == "__main__":

@@ -73,15 +73,23 @@ class FlexAIPlacementService:
     """
 
     def __init__(self, platform, params, *, backlog_scale: float = 1.0,
-                 min_bucket: int = 64):
-        from repro.core.flexai.engine import make_schedule_fn
+                 min_bucket: int = 64, mesh=None):
+        from repro.core.flexai.engine import (make_schedule_fn,
+                                              make_sharded_schedule_fn)
         from repro.core.platform_jax import spec_from_platform
         self.spec = spec_from_platform(platform)
         self.params = params
         self.backlog_scale = backlog_scale
         self.min_bucket = min_bucket
-        self._batched_fn = make_schedule_fn(self.spec, backlog_scale,
-                                            batched=True)
+        self.shards = 1 if mesh is None else int(mesh.size)
+        if mesh is None:
+            self._batched_fn = make_schedule_fn(self.spec, backlog_scale,
+                                                batched=True)
+        else:
+            # multi-device serving: each bucket's lane batch is padded to
+            # a multiple of the mesh size and split across devices
+            self._batched_fn = make_sharded_schedule_fn(
+                self.spec, mesh, backlog_scale, axis=mesh.axis_names[0])
         self.dispatches = 0
 
     def _bucket(self, n: int) -> int:
@@ -94,8 +102,9 @@ class FlexAIPlacementService:
         """Schedule every queue; returns one summary dict per queue with
         ``placements`` trimmed to the queue's real length."""
         from repro.core.platform_jax import summarize
-        from repro.core.tasks import (TaskArrays, pad_task_arrays,
-                                      stack_task_arrays, tasks_to_arrays)
+        from repro.core.tasks import (TaskArrays, pad_route_batch,
+                                      pad_task_arrays, stack_task_arrays,
+                                      tasks_to_arrays)
         arrays = [q if isinstance(q, TaskArrays) else tasks_to_arrays(q)
                   for q in queues]
         by_bucket: dict = {}
@@ -105,6 +114,8 @@ class FlexAIPlacementService:
         for bucket, idxs in sorted(by_bucket.items()):
             batch = stack_task_arrays(
                 [pad_task_arrays(arrays[i], bucket) for i in idxs])
+            if self.shards > 1:
+                batch = pad_route_batch(batch, self.shards)
             out = self._batched_fn(self.params, batch)
             # one device->host transfer per bucket, then NumPy slicing —
             # per-lane device gathers would issue hundreds of tiny

@@ -136,9 +136,8 @@ def test_error_feedback_compensates():
     ["batch", "embed", "heads", "mlp", "vocab", "expert", None]),
     min_size=1, max_size=4))
 def test_mesh_axes_never_reused(names):
-    import jax
-    from repro.sharding import DEFAULT_RULES
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    from repro.sharding import DEFAULT_RULES, abstract_mesh
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     spec = logical_to_mesh_axes(tuple(names), DEFAULT_RULES, mesh)
     used = []
     for entry in spec:

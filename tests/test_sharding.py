@@ -11,7 +11,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.sharding import DEFAULT_RULES, Param, boxed_axes, logical_to_mesh_axes, unbox
+from repro.sharding import (DEFAULT_RULES, Param, abstract_mesh, boxed_axes,
+                            logical_to_mesh_axes, unbox)
 
 
 def test_param_boxing_roundtrip():
@@ -38,12 +39,12 @@ def test_eval_shape_keeps_boxes():
 
 
 def test_multipod_axis_resolution():
-    mesh = jax.sharding.AbstractMesh((2, 4, 4), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 4, 4), ("pod", "data", "model"))
     spec = logical_to_mesh_axes(("batch", None, "mlp"), DEFAULT_RULES, mesh)
     assert spec[0] == ("pod", "data")
     assert spec[2] == "model"
     # single-pod mesh: the "pod" component is dropped transparently
-    mesh1 = jax.sharding.AbstractMesh((4, 4), ("data", "model"))
+    mesh1 = abstract_mesh((4, 4), ("data", "model"))
     spec1 = logical_to_mesh_axes(("batch", None, "mlp"), DEFAULT_RULES, mesh1)
     assert spec1[0] == "data"
 
