@@ -1,34 +1,92 @@
 """Figure 12: FlexAI vs baselines — time, R_Balance, MS, energy across
-areas (UB/UHW/HW) and task queues."""
+areas (UB/UHW/HW) and task queues.
+
+Every scheduler family runs through the device-resident substrate at
+multi-route scale: the area's queues are stacked into one [R, T] batch and
+each family (FlexAI scan, Min-Min/ATA/worst scan, device GA/SA) schedules
+the whole batch in one vmapped dispatch.  The NumPy loop schedulers remain
+available as oracles (``tests/test_scan_engine.py`` /
+``tests/test_metaheuristics.py``) but no longer sit on the benchmark path.
+"""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import platform, queues_for, row, save, trained_flexai
 
-BASELINES = ("minmin", "ata", "ga", "sa", "worst")
+HEURISTICS = ("minmin", "ata", "worst")
+METAHEURISTICS = ("ga", "sa")
+BASELINES = HEURISTICS + METAHEURISTICS
+
+
+def _lane_summaries(spec, out, n_lanes: int, dt: float,
+                    lane_tasks: list) -> list:
+    """Per-route summaries from one batched dispatch; the dispatch wall
+    time is attributed per task across the batch."""
+    import jax
+
+    from repro.core.platform_jax import summarize
+    finals, recs = out
+    total = max(sum(lane_tasks), 1)
+    summs = []
+    for i in range(n_lanes):
+        s = summarize(spec,
+                      jax.tree_util.tree_map(lambda a, i=i: a[i], finals),
+                      jax.tree_util.tree_map(lambda a, i=i: a[i], recs))
+        s["schedule_time_s"] = dt * lane_tasks[i] / total
+        s["schedule_time_per_task_s"] = dt / total
+        summs.append(s)
+    return summs
+
+
+def _timed(fn):
+    """Warm (compile) then measure one dispatch."""
+    import jax
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    return out, time.perf_counter() - t0
 
 
 def run(quick: bool = True) -> list:
-    from repro.core.schedulers import get_scheduler
+    import jax
+
+    from repro.core.flexai.engine import make_schedule_fn
+    from repro.core.platform_jax import spec_from_platform
+    from repro.core.schedulers import (get_scan_scheduler,
+                                       make_metaheuristic_fn)
+    from repro.core.tasks import stack_task_arrays, tasks_to_arrays
+
     areas = ["UB"] if quick else ["UB", "UHW", "HW"]
     n_queues = 2 if quick else 5
     rows = []
     for area in areas:
         agent = trained_flexai(area, quick=quick)
         queues = queues_for(area, n_queues, km=0.1, seed0=50)
+        arrays = [tasks_to_arrays(q) for q in queues]
+        lane_tasks = [ta.num_tasks for ta in arrays]
+        batch = stack_task_arrays(arrays)
+        spec = spec_from_platform(platform())
+
         results = {}
-        for name in BASELINES:
-            per_q = []
-            for q in queues:
-                p = platform()
-                per_q.append(get_scheduler(name).schedule(p, q))
-            results[name] = per_q
-        per_q = []
-        for q in queues:
-            p = platform()
-            per_q.append(agent.schedule(p, q))
-        results["flexai"] = per_q
+        for name in HEURISTICS:
+            fn = get_scan_scheduler(name, batched=True)
+            out, dt = _timed(lambda fn=fn: fn(spec, batch))
+            results[name] = _lane_summaries(spec, out, n_queues, dt,
+                                            lane_tasks)
+        keys = jax.random.split(jax.random.PRNGKey(0), n_queues)
+        for name in METAHEURISTICS:
+            fn = make_metaheuristic_fn(spec, name, batched=True)
+            out, dt = _timed(lambda fn=fn: fn(keys, batch))
+            results[name] = _lane_summaries(spec, out, n_queues, dt,
+                                            lane_tasks)
+        fn = make_schedule_fn(spec, agent.cfg.backlog_scale, batched=True)
+        params = agent.learner.eval_p
+        out, dt = _timed(lambda: fn(params, batch))
+        results["flexai"] = _lane_summaries(spec, out, n_queues, dt,
+                                            lane_tasks)
 
         for name, rs in results.items():
             gm = lambda k: float(np.exp(np.mean(np.log(np.maximum(

@@ -1,0 +1,158 @@
+"""Device vs Python-loop GA/SA: scheduled-tasks/sec + fitness parity
+(the ISSUE-3 perf tentpole).
+
+Compares the windowed metaheuristic baselines at *equal population /
+generations / iterations*: the NumPy loop (`GAScheduler` / `SAScheduler`,
+one Python platform simulation per individual per generation per window)
+against the device path (`make_metaheuristic_fn`: max-plus window fitness,
+on-device evolution, one scan dispatch per route — or per route *batch*).
+
+Also checks the fixed-seed fitness parity of the device ``window_fitness``
+against the NumPy ``ga._evaluate`` oracle on a warm mid-route snapshot.
+
+Emits the standard benchmark rows *and* ``BENCH_metaheuristics.json``
+(repo root) so the trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RATE_SCALE, platform, row, save
+
+
+def _routes(n: int, km: float):
+    from repro.core.environment import EnvironmentParams, build_task_queue
+    return [build_task_queue(EnvironmentParams(
+        route_km=km, rate_scale=RATE_SCALE, seed=200 + s))
+        for s in range(n)]
+
+
+def _time(fn, iters: int = 3):
+    """Best-of-iters, applied identically to the loop and device paths:
+    the shared CI host is noisy and min is the standard read of the
+    machine's capability (same policy as ``sharded_engine.best_of``)."""
+    fn()  # warmup (includes compile for the jitted paths)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _fitness_parity(plat, spec, queue, n_windows: int = 8) -> float:
+    """Max relative |device - oracle| window fitness over random
+    assignments evaluated from a warm mid-route snapshot."""
+    from repro.core.platform_jax import state_from_platform
+    from repro.core.schedulers import window_fitness
+    from repro.core.schedulers.ga import _evaluate
+    from repro.core.tasks import tasks_to_arrays
+    rng = np.random.default_rng(0)
+    if len(queue) < 70:
+        raise ValueError(
+            f"parity check needs a >= 70-task route, got {len(queue)} — "
+            "an empty window would report parity vacuously")
+    for t in queue[:40]:
+        plat.execute(t, int(rng.integers(0, plat.n)))
+    snap = state_from_platform(plat)
+    window = queue[40:70]
+    wa = tasks_to_arrays(window)
+    worst = 0.0
+    for _ in range(n_windows):
+        assign = rng.integers(0, plat.n, len(window))
+        ref = _evaluate(plat, window, assign)
+        dev = float(window_fitness(spec, snap, wa,
+                                   np.asarray(assign, np.int32)))
+        worst = max(worst, abs(dev - ref) / max(abs(ref), 1e-12))
+    return worst
+
+
+def run(quick: bool = True) -> list:
+    import jax
+
+    from repro.core.platform_jax import spec_from_platform
+    from repro.core.schedulers import (GAConfig, SAConfig, get_scheduler,
+                                       make_metaheuristic_fn)
+    from repro.core.tasks import stack_task_arrays, tasks_to_arrays
+
+    km = 0.06 if quick else 0.15
+    n_routes = 8 if quick else 16
+    routes = _routes(n_routes, km)
+    arrays = [tasks_to_arrays(q) for q in routes]
+    batch = stack_task_arrays(arrays)
+    n_tasks = len(routes[0])
+    batch_tasks = sum(len(q) for q in routes)
+
+    plat = platform()
+    spec = spec_from_platform(plat)
+    ga_cfg, sa_cfg = GAConfig(), SAConfig(chains=1)
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, batch.arrival.shape[0])
+
+    results = {
+        "n_tasks_per_route": n_tasks,
+        "n_routes": n_routes,
+        "rate_scale": RATE_SCALE,
+        "ga": {"window": ga_cfg.window, "population": ga_cfg.population,
+               "generations": ga_cfg.generations},
+        "sa": {"window": sa_cfg.window, "iters": sa_cfg.iters,
+               "chains": sa_cfg.chains},
+    }
+    rows = []
+    for name, cfg in (("ga", ga_cfg), ("sa", sa_cfg)):
+        # 1) the NumPy per-task loop (the pre-tentpole hot path)
+        loop_sched = get_scheduler(name)
+        t_loop = _time(lambda: loop_sched.schedule(platform(), routes[0]))
+        loop_tps = n_tasks / t_loop
+        # 2) fused device search, one dispatch per route
+        fn = make_metaheuristic_fn(spec, name, cfg)
+        t_dev = _time(lambda: jax.block_until_ready(fn(key, arrays[0])))
+        dev_tps = n_tasks / t_dev
+        # 3) vmapped multi-route batch, one dispatch for all routes
+        fnb = make_metaheuristic_fn(spec, name, cfg, batched=True)
+        t_batch = _time(lambda: jax.block_until_ready(fnb(keys, batch)))
+        batch_tps = batch_tasks / t_batch
+        results[name].update({
+            "loop_tasks_per_s": round(loop_tps, 1),
+            "device_tasks_per_s": round(dev_tps, 1),
+            "device_batch_tasks_per_s": round(batch_tps, 1),
+            "speedup_device_vs_loop": round(dev_tps / loop_tps, 2),
+            "speedup_batch_vs_loop": round(batch_tps / loop_tps, 2),
+        })
+        rows += [
+            row(f"metaheuristics/{name}/loop", t_loop / n_tasks * 1e6,
+                f"{loop_tps:.0f} tasks/s"),
+            row(f"metaheuristics/{name}/device", t_dev / n_tasks * 1e6,
+                f"{dev_tps:.0f} tasks/s"),
+            row(f"metaheuristics/{name}/device_batch",
+                t_batch / batch_tasks * 1e6,
+                f"{batch_tps:.0f} tasks/s over {n_routes} routes"),
+            row(f"metaheuristics/{name}/speedup_device_vs_loop", 0.0,
+                results[name]["speedup_device_vs_loop"]),
+        ]
+
+    parity = _fitness_parity(platform(), spec, routes[0])
+    results["fitness_max_rel_diff"] = parity
+    results["fitness_parity_ok"] = bool(parity <= 1e-4)
+    results["meets_20x_ga"] = bool(
+        results["ga"]["speedup_device_vs_loop"] >= 20.0
+        or results["ga"]["speedup_batch_vs_loop"] >= 20.0)
+    with open(os.path.join(os.getcwd(), "BENCH_metaheuristics.json"),
+              "w") as f:
+        json.dump(results, f, indent=1)
+
+    rows.append(row("metaheuristics/fitness_max_rel_diff", 0.0,
+                    f"{parity:.2e}"))
+    rows.append(row("metaheuristics/meets_20x_ga", 0.0,
+                    results["meets_20x_ga"]))
+    save("metaheuristic_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=os.environ.get("BENCH_FULL", "") != "1"):
+        print(r)

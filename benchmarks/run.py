@@ -21,6 +21,7 @@ MODULES = [
     "fig13_stmrate",
     "fig14_braking_distance",
     "scheduler_throughput",
+    "metaheuristic_throughput",
     "sharded_engine",
     "kernel_micro",
     "roofline",

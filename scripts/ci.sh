@@ -11,6 +11,9 @@
 # 4. Sharded-engine smoke on 8 forced host devices: the shard_map'd
 #    multi-device schedule path must match the single-device scan engine
 #    (the child asserts fp32 parity before printing its result line).
+# 5. Quick-mode benchmark smoke: the metaheuristic throughput module
+#    (device GA/SA vs the NumPy loop + fitness parity) must run end to
+#    end and report fitness parity vs the oracle.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -35,5 +38,18 @@ XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
         --lanes 16 --tasks 128 --iters 1
 sharded=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} =="
-[ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ]
+echo "== benchmark smoke (quick mode: metaheuristic throughput) =="
+python -m benchmarks.run --only metaheuristic_throughput \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_metaheuristics.json"))
+ok = r["fitness_parity_ok"]
+print(f"fitness_parity_ok={ok} "
+      f"ga_speedup={r['ga']['speedup_device_vs_loop']}x")
+sys.exit(0 if ok else 1)
+EOF
+bench=$?
+
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} bench_exit=${bench} =="
+[ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
+    && [ "${bench}" -eq 0 ]

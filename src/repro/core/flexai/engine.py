@@ -55,9 +55,10 @@ def _schedule_run(spec: PlatformSpec, backlog_scale: float):
         action = jnp.argmax(qnet_apply(params, sv)).astype(jnp.int32)
         return platform_step(spec, state, task, action)
 
-    def run(params, tasks: TaskArrays):
+    def run(params, tasks: TaskArrays, state0=None):
+        init = platform_init(spec.n) if state0 is None else state0
         final, recs = jax.lax.scan(functools.partial(body, params),
-                                   platform_init(spec.n), tasks)
+                                   init, tasks)
         return final, recs
 
     return run
@@ -69,7 +70,9 @@ def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
 
     Returns ``fn(params, tasks) -> (final_state, records)``; with
     ``batched=True`` the tasks carry a leading route axis [R, T] and the
-    params are shared across routes.
+    params are shared across routes.  The single-route variant also
+    accepts an optional third ``state0`` argument to resume scheduling
+    from a mid-route ``PlatformState`` (the fig-14 braking continuation).
     """
     run = _schedule_run(spec, backlog_scale)
     if batched:

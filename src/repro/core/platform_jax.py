@@ -95,6 +95,25 @@ def platform_init(n: int) -> PlatformState:
     )
 
 
+def state_from_platform(platform) -> PlatformState:
+    """Snapshot a live ``HMAIPlatform`` into a ``PlatformState``.
+
+    This is the scratch-evaluation seam for the windowed metaheuristics:
+    a search can fork any mid-route platform into a device-side snapshot,
+    score candidate window assignments against it (``window_fitness``)
+    without mutating the oracle, and commit only the winner.
+    """
+    f32 = lambda a: jnp.asarray(a, jnp.float32)  # noqa: E731
+    return PlatformState(
+        avail=f32(platform.avail), busy=f32(platform.busy),
+        E=f32(platform.E), T=f32(platform.T), MS=f32(platform.MS),
+        R_Balance=f32(platform.R_Balance),
+        num_tasks=jnp.asarray(platform.num_tasks, jnp.int32),
+        e_scale=jnp.float32(platform._e_scale),
+        t_scale=jnp.float32(platform._t_scale),
+    )
+
+
 def platform_step(spec: PlatformSpec, state: PlatformState, task: TaskArrays,
                   action: jax.Array, valid=None
                   ) -> tuple[PlatformState, StepRecord]:

@@ -6,3 +6,7 @@ from repro.core.schedulers.sa import SAScheduler
 from repro.core.schedulers.worst import WorstCaseScheduler, RandomScheduler
 from repro.core.schedulers.scan import (SCAN_SCHEDULERS, get_scan_scheduler,
                                         scan_schedule)
+from repro.core.schedulers.metaheuristic_jax import (
+    DeviceGAScheduler, DeviceSAScheduler, GAConfig, SAConfig,
+    make_metaheuristic_fn, make_sharded_metaheuristic_fn,
+    metaheuristic_schedule, window_fitness)

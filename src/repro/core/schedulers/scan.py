@@ -17,19 +17,21 @@ import jax.numpy as jnp
 from repro.core.platform_jax import (PlatformSpec, platform_init,
                                      platform_step, spec_from_platform,
                                      summarize)
-from repro.core.tasks import TaskArrays, tasks_to_arrays
+from repro.core.tasks import (TaskArrays, tasks_to_arrays,
+                              window_task_arrays)
 
 
-def worst_scan(spec: PlatformSpec, tasks: TaskArrays):
+def worst_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None):
     """Everything onto accelerator 0 (the unscheduled worst case)."""
 
     def body(state, task):
         return platform_step(spec, state, task, jnp.int32(0))
 
-    return jax.lax.scan(body, platform_init(spec.n), tasks)
+    init = platform_init(spec.n) if state0 is None else state0
+    return jax.lax.scan(body, init, tasks)
 
 
-def ata_scan(spec: PlatformSpec, tasks: TaskArrays):
+def ata_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None):
     """ATA: lowest-energy accelerator meeting the safety time; fastest
     response as the deadline-salvage fallback (mirrors ``ATAScheduler``)."""
 
@@ -43,10 +45,12 @@ def ata_scan(spec: PlatformSpec, tasks: TaskArrays):
                            jnp.argmin(resp)).astype(jnp.int32)
         return platform_step(spec, state, task, action)
 
-    return jax.lax.scan(body, platform_init(spec.n), tasks)
+    init = platform_init(spec.n) if state0 is None else state0
+    return jax.lax.scan(body, init, tasks)
 
 
-def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, window: int = 30):
+def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
+                window: int = 30):
     """Windowed Min-Min as a nested scan.
 
     Outer scan walks windows of ``window`` tasks; the inner scan commits
@@ -56,13 +60,7 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, window: int = 30):
     window step degenerates to a masked no-op ``platform_step``.
     """
     n = spec.n
-    t = tasks.arrival.shape[0]
-    pad = -t % window
-    win = TaskArrays(*[
-        jnp.concatenate([jnp.asarray(a),
-                         jnp.zeros((pad,), jnp.asarray(a).dtype)]
-                        ).reshape(-1, window)
-        for a in tasks])
+    win = window_task_arrays(tasks, window)
 
     def inner(wtasks, carry, _):
         state, scheduled = carry
@@ -83,7 +81,8 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, window: int = 30):
             None, length=window)
         return state, recs
 
-    final, recs = jax.lax.scan(outer, platform_init(n), win)
+    init = platform_init(n) if state0 is None else state0
+    final, recs = jax.lax.scan(outer, init, win)
     recs = jax.tree_util.tree_map(lambda a: a.reshape(-1, *a.shape[2:]),
                                   recs)
     return final, recs
@@ -109,6 +108,20 @@ def get_scan_scheduler(name: str, batched: bool = False):
     return _JIT_CACHE[key]
 
 
+def package_device_summary(spec, final, recs, dt: float,
+                           n_tasks: int) -> dict:
+    """``Scheduler.schedule``-shaped summary from one device dispatch:
+    metrics via ``summarize``, wall time per task, and the committed
+    placements trimmed to valid (non-padding) rows."""
+    import numpy as np
+    summ = summarize(spec, final, recs)
+    summ["schedule_time_s"] = dt
+    summ["schedule_time_per_task_s"] = dt / max(n_tasks, 1)
+    summ["placements"] = np.asarray(recs.action)[
+        np.asarray(recs.valid, bool)]
+    return summ
+
+
 def scan_schedule(name: str, platform, tasks) -> dict:
     """Convenience mirror of ``Scheduler.schedule``: same summary keys,
     computed from one device dispatch."""
@@ -119,9 +132,4 @@ def scan_schedule(name: str, platform, tasks) -> dict:
     final, recs = fn(spec, ta)
     jax.block_until_ready(final)
     dt = time.perf_counter() - t0
-    summ = summarize(spec, final, recs)
-    summ["schedule_time_s"] = dt
-    summ["schedule_time_per_task_s"] = dt / max(ta.num_tasks, 1)
-    import numpy as np
-    summ["placements"] = np.asarray(recs.action)
-    return summ
+    return package_device_summary(spec, final, recs, dt, ta.num_tasks)

@@ -122,6 +122,22 @@ def stack_task_arrays(routes: list) -> TaskArrays:
                         for f in TaskArrays._fields])
 
 
+def window_task_arrays(ta: TaskArrays, window: int) -> TaskArrays:
+    """Right-pad a [T] route with invalid zero rows to a ``window``
+    multiple and fold it to [n_windows, window] — the shared layout of
+    the windowed scan schedulers (Min-Min, device GA/SA).  jnp-based so
+    it can run inside a traced function (vmap-safe: shapes are static).
+    """
+    import jax.numpy as jnp
+    t = ta.arrival.shape[0]
+    pad = -t % window
+    return TaskArrays(*[
+        jnp.concatenate([jnp.asarray(a),
+                         jnp.zeros((pad,), jnp.asarray(a).dtype)]
+                        ).reshape(-1, window)
+        for a in ta])
+
+
 def invalid_task_arrays(length: int) -> TaskArrays:
     """An all-padding route: every row carries ``valid=False`` so the scan
     engine passes the platform state through untouched."""

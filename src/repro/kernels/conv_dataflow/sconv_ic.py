@@ -53,8 +53,11 @@ def sconv_ic(x: jax.Array, w: jax.Array, *, row_tile: int = 8,
     n, h, wd, cin = x.shape
     kh, kw, _, cout = w.shape
     ho, wo = h - kh + 1, wd - kw + 1
+    # the grid tiles output rows evenly; for odd heights fall back to the
+    # largest divisor of ho that fits the requested tile
     row_tile = min(row_tile, ho)
-    assert ho % row_tile == 0, (ho, row_tile)
+    while ho % row_tile:
+        row_tile -= 1
     grid = (n, ho // row_tile)
 
     return pl.pallas_call(

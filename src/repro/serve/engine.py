@@ -17,18 +17,26 @@ import numpy as np
 from repro.models.api import ModelAPI
 
 
-def make_serve_step(api: ModelAPI, greedy: bool = True):
-    """(params, cache, token [B,1], pos scalar) -> (next_token, logits, cache)."""
+def make_serve_step(api: ModelAPI, greedy: bool = True,
+                    temperature: float = 1.0, top_k: int = 0):
+    """(params, cache, token [B,1], pos scalar) -> (next_token, logits, cache).
+
+    With ``greedy=False`` the step takes a trailing PRNG ``key`` argument
+    and samples through :func:`sample_token` (temperature / top-k).
+    """
 
     def serve_step(params, cache, token, pos):
         logits, new_cache = api.decode_step(params, cache, token, pos)
-        if greedy:
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        else:
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return nxt[:, None], logits, new_cache
 
-    return serve_step
+    def sampled_step(params, cache, token, pos, key):
+        logits, new_cache = api.decode_step(params, cache, token, pos)
+        nxt = sample_token(logits[:, -1, :], key, temperature=temperature,
+                           top_k=top_k)
+        return nxt[:, None], logits, new_cache
+
+    return serve_step if greedy else sampled_step
 
 
 def make_prefill_step(api: ModelAPI):

@@ -48,6 +48,27 @@ def test_conv_same_padding_and_stride():
     assert out.shape == (1, 5, 5, 8)
 
 
+def test_sconv_direct_calls_with_indivisible_tiles():
+    """Direct kernel calls with a tile that doesn't divide the dim must
+    fall back to the largest divisor instead of asserting (odd
+    feature-map heights / channel counts)."""
+    from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
+    from repro.kernels.conv_dataflow.sconv_od import sconv_od
+    k1, k2 = jax.random.split(KEY)
+    # ho = 9 with row_tile=8 and cin = 6 with cin_tile=4: the requested
+    # tile does NOT divide the dim even after the min() clamp, so the
+    # divisor-fallback loop must actually run (9 -> 3, 6 -> 3)
+    x = jax.random.normal(k1, (1, 11, 8, 6), jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 6, 8), jnp.float32) * 0.2
+    ref = conv2d_ref(x, w)
+    out_ic = sconv_ic(x, w, row_tile=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_ic), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    out_od = sconv_od(x, w, cin_tile=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_od), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
 ATTN_SHAPES = [
     (1, 64, 4, 4, 32, True),
     (2, 128, 4, 2, 16, True),

@@ -5,7 +5,8 @@ import numpy as np
 
 from repro.models.api import model_api
 from repro.models.config import ModelConfig
-from repro.serve.engine import Request, ServeEngine, sample_token
+from repro.serve.engine import (Request, ServeEngine, make_serve_step,
+                                sample_token)
 from repro.sharding import unbox
 
 KEY = jax.random.PRNGKey(5)
@@ -40,6 +41,35 @@ def test_greedy_decode_deterministic():
                            max_new_tokens=6))
         eng.run_until_done()
     assert eng1.finished[0].generated == eng2.finished[0].generated
+
+
+def test_serve_step_sampled_path():
+    """greedy=False must route through sample_token (the previously dead
+    branch): temperature 0 reduces to the greedy argmax, temperature 1
+    actually samples across seeds."""
+    api = model_api(CFG)
+    params = unbox(api.init(KEY))
+    greedy_step = make_serve_step(api)
+    argmax_step = make_serve_step(api, greedy=False, temperature=0.0)
+    sampled_step = make_serve_step(api, greedy=False, temperature=1.0)
+    tok = jnp.ones((2, 1), jnp.int32)
+    pos = jnp.int32(0)
+
+    def cache():
+        return unbox(api.init_cache(2, 8))
+
+    n_greedy, logits, _ = greedy_step(params, cache(), tok, pos)
+    assert n_greedy.shape == (2, 1)
+    np.testing.assert_array_equal(
+        np.asarray(n_greedy[:, 0]),
+        np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)))
+    n_zero, _, _ = argmax_step(params, cache(), tok, pos,
+                               jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(n_zero), np.asarray(n_greedy))
+    seen = {int(sampled_step(params, cache(), tok, pos,
+                             jax.random.PRNGKey(s))[0][0, 0])
+            for s in range(8)}
+    assert len(seen) > 1
 
 
 def test_sample_token_topk():
