@@ -42,6 +42,31 @@ def save(module: str, rows: list) -> None:
         json.dump(rows, f, indent=1, default=str)
 
 
+def spawn_forced_device_child(module: str, devices: int, args: list,
+                              result_tag: str, timeout: int = 1200) -> dict:
+    """Run ``python -m benchmarks.<module> --child ...`` in a subprocess
+    with ``--xla_force_host_platform_device_count`` (which must be set
+    before jax imports) and parse the tagged JSON result line — the
+    shared protocol of the multi-device benchmark children."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", f"benchmarks.{module}", "--child",
+           "--devices", str(devices)] + [str(a) for a in args]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=timeout, cwd=root)
+    if out.returncode != 0:
+        raise RuntimeError(f"{module} child (devices={devices}) failed:\n"
+                           + out.stderr[-2000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith(result_tag)][0]
+    return json.loads(line[len(result_tag):])
+
+
 def queues_for(area: str, n: int, km: float, seed0: int = 0):
     from repro.core.environment import Area, EnvironmentParams, build_task_queue
     return [build_task_queue(EnvironmentParams(
@@ -57,28 +82,57 @@ def platform():
 _AGENT_CACHE = {}
 
 
+def flexai_ckpt_path(area: str, quick: bool = False) -> str:
+    """Per-area checkpoint; quick-mode checkpoints carry a ``_quick``
+    suffix so a short smoke train can never masquerade as the full
+    "well-trained agent" in a later quick=False run."""
+    suffix = "_quick" if quick else ""
+    return os.path.join("experiments", "flexai",
+                        f"agent_{area.lower()}{suffix}.npz")
+
+
 def trained_flexai(area: str = "UB", episodes: int = 25, quick: bool = True):
     """Train (or load) a FlexAI agent for an area; cached per process.
 
-    If a pre-trained checkpoint exists (the long offline run in
-    experiments/flexai/), load it — the paper's "well-trained agent".
-    Quick mode otherwise trains a small number of episodes.
+    If a usable pre-trained checkpoint for *this area* exists (written by
+    a previous benchmark process or the ``launch.train --flexai`` offline
+    run), load it — the paper's "well-trained agent".  Full runs only
+    accept the full checkpoint; quick runs prefer it but fall back to the
+    quick one.  Otherwise train device-resident (``ScanFlexAI`` fused
+    episodes with eval-based model selection), export the weights to the
+    Python-loop wrapper the figure modules consume, and write the
+    checkpoint (plus a loss-history sidecar, so fig11 still has a curve
+    when a later process loads the checkpoint instead of retraining).
     """
     key = (area, quick)
     if key in _AGENT_CACHE:
         return _AGENT_CACHE[key]
-    from repro.core.flexai import FlexAIAgent, FlexAIConfig
+    from repro.core.flexai import FlexAIAgent, FlexAIConfig, ScanFlexAI
     plat = platform()
-    agent = FlexAIAgent(plat, FlexAIConfig(
+    cfg = FlexAIConfig(
         lr=1e-3, gamma=0.98, min_replay=256, update_every=2,
-        eps_decay_steps=40000, target_sync_every=500))
-    ckpt = os.path.join("experiments", "flexai", "agent_ub.npz")
-    if os.path.exists(ckpt):
+        eps_decay_steps=40000, target_sync_every=500)
+    candidates = [flexai_ckpt_path(area)]
+    if quick:
+        candidates.append(flexai_ckpt_path(area, quick=True))
+    ckpt = next((c for c in candidates if os.path.exists(c)), None)
+    if ckpt is not None:
+        losses_path = ckpt[: -len(".npz")] + "_losses.npy"
+        agent = FlexAIAgent(plat, cfg)
         agent.load_weights(ckpt)
+        if os.path.exists(losses_path):
+            agent.losses = np.load(losses_path).tolist()
     else:
+        ckpt = flexai_ckpt_path(area, quick=quick)
+        losses_path = ckpt[: -len(".npz")] + "_losses.npy"
         queues = queues_for(area, 4, km=0.15)
         val_q = queues_for(area, 1, km=0.15, seed0=50)[0]
-        agent.train(plat, queues, episodes=episodes if not quick else 12,
-                    eval_queue=val_q, eval_every=4)
+        trainer = ScanFlexAI(plat, cfg)
+        trainer.train(queues, episodes=episodes if not quick else 12,
+                      eval_queue=val_q, eval_every=4)
+        agent = trainer.to_agent(plat)
+        os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+        agent.save_weights(ckpt)
+        np.save(losses_path, np.asarray(trainer.losses, np.float64))
     _AGENT_CACHE[key] = agent
     return agent

@@ -11,6 +11,13 @@ dispatch, then the braking detection task is scheduled *from the final
 engines) so the brake decision sees the route's accumulated backlog
 exactly as the per-task loop did.  T_schedule is the warm per-task
 dispatch rate — compile time is excluded by warming both shapes first.
+
+Beyond the single-event Fig-14 bars, each family also reports a p50/p99
+end-to-end latency distribution over many brake events (one per route
+seed, routes padded to one static shape so every event reuses a single
+compiled dispatch): the paper's safety claim rests on the *tail* of the
+response time, not its warm-path mean — ROADMAP's braking-distance-
+fidelity item.
 """
 from __future__ import annotations
 
@@ -56,15 +63,38 @@ def _braking(run_fn, ta_queue, ta_brake):
     }
 
 
+def _latency_distribution(run_fn, routes, brakes):
+    """End-to-end brake latency (seconds) over one brake event per route:
+    run each route to its final ``PlatformState``, schedule that route's
+    brake task from it, and time the warm brake dispatch itself.  Routes
+    share one padded shape, so every event after the first reuses the
+    compiled executables."""
+    import jax
+    # warm both shapes
+    final, _ = run_fn(routes[0], None)
+    jax.block_until_ready(run_fn(brakes[0], final))
+    totals = []
+    for ta_route, ta_brake in zip(routes, brakes):
+        final, _ = jax.block_until_ready(run_fn(ta_route, None))
+        t0 = time.perf_counter()
+        _, recs = jax.block_until_ready(run_fn(ta_brake, final))
+        t_sched = time.perf_counter() - t0
+        t_wait = float(recs.wait[0]) * RATE_SCALE
+        t_compute = float(recs.exec_time[0]) * RATE_SCALE
+        totals.append(t_wait + t_sched + t_compute + T_DATA + T_MECH)
+    return np.asarray(totals)
+
+
 def run(quick: bool = True) -> list:
     import jax
 
-    from repro.core.criteria import camera_safety_time
+    from repro.core.criteria import camera_safety_time, rss_safe_distance
     from repro.core.flexai.engine import make_schedule_fn
     from repro.core.platform_jax import spec_from_platform
     from repro.core.schedulers import (get_scan_scheduler,
                                        make_metaheuristic_fn)
-    from repro.core.tasks import Task, TaskKind, tasks_to_arrays
+    from repro.core.tasks import (Task, TaskKind, pad_task_arrays,
+                                  tasks_to_arrays)
     queue = queues_for("UB", 1, km=0.08 if quick else 0.15, seed0=90)[0]
     t_end = queue[-1].arrival_time
     brake_task = Task(uid=10**9, kind=TaskKind.YOLO, camera_group="FC",
@@ -74,6 +104,19 @@ def run(quick: bool = True) -> list:
     ta_brake = tasks_to_arrays([brake_task])
     agent = trained_flexai("UB", quick=quick)
     spec = spec_from_platform(platform())
+
+    # many-event set: one brake per route seed, padded to a shared shape
+    n_events = 8 if quick else 24
+    event_queues = queues_for("UB", n_events, km=0.08 if quick else 0.15,
+                              seed0=400)
+    t_max = max(len(q) for q in event_queues)
+    event_routes = [pad_task_arrays(tasks_to_arrays(q), t_max)
+                    for q in event_queues]
+    event_brakes = [tasks_to_arrays([Task(
+        uid=10**9 + i, kind=TaskKind.YOLO, camera_group="FC", camera_id=0,
+        arrival_time=q[-1].arrival_time,
+        safety_time=camera_safety_time("FC", "UB", "GS"))])
+        for i, q in enumerate(event_queues)]
 
     scheds = {}
     for name in ("minmin", "ata", "worst"):
@@ -96,6 +139,12 @@ def run(quick: bool = True) -> list:
                         round(res["braking_distance_m"], 2),
                         breakdown={k: round(v, 3) for k, v in res.items()
                                    if k.endswith("_ms")}))
+        lat = _latency_distribution(fn, event_routes, event_brakes)
+        p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+        rows.append(row(
+            f"fig14/{name}/latency_p50_ms", 0.0, round(p50 * 1e3, 3),
+            p99_ms=round(p99 * 1e3, 3), events=len(lat),
+            braking_distance_p99_m=round(rss_safe_distance(V, V, p99), 2)))
     worst = max(dists.values())
     best = dists["flexai"]
     rows.append(row("fig14/flexai_reduction_vs_worst", 0.0,

@@ -23,6 +23,7 @@ MODULES = [
     "scheduler_throughput",
     "metaheuristic_throughput",
     "sharded_engine",
+    "training_throughput",
     "kernel_micro",
     "roofline",
 ]

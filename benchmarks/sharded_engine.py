@@ -17,7 +17,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import subprocess
 import sys
 
 DEVICE_COUNTS = (1, 2, 4)
@@ -117,25 +116,12 @@ def _child_main(args) -> None:
 
 def _spawn(devices: int, lanes: int, tasks: int, iters: int,
            unique_routes: int) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    cmd = [sys.executable, "-m", "benchmarks.sharded_engine", "--child",
-           "--devices", str(devices), "--lanes", str(lanes),
-           "--tasks", str(tasks), "--iters", str(iters),
-           "--unique-routes", str(unique_routes)]
-    out = subprocess.run(
-        cmd, env=env, capture_output=True, text=True, timeout=1200,
-        cwd=os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
-    if out.returncode != 0:
-        raise RuntimeError(
-            f"sharded_engine child (devices={devices}) failed:\n"
-            + out.stderr[-2000:])
-    line = [l for l in out.stdout.splitlines()
-            if l.startswith(RESULT_TAG)][0]
-    return json.loads(line[len(RESULT_TAG):])
+    from benchmarks.common import spawn_forced_device_child
+    return spawn_forced_device_child(
+        "sharded_engine", devices,
+        ["--lanes", lanes, "--tasks", tasks, "--iters", iters,
+         "--unique-routes", unique_routes],
+        RESULT_TAG)
 
 
 def run(quick: bool = True) -> list:

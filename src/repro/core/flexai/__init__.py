@@ -2,8 +2,8 @@ from repro.core.flexai.dqn import DQNParams, init_qnet, qnet_apply, DQNLearner
 from repro.core.flexai.replay import ReplayBuffer, DeviceReplay
 from repro.core.flexai.agent import FlexAIAgent, FlexAIConfig
 from repro.core.flexai.reward import compute_reward
-from repro.core.flexai.engine import (ScanFlexAI, TrainState,
-                                      make_schedule_fn,
+from repro.core.flexai.engine import (ScanFlexAI, TrainState, dp_train_init,
+                                      make_dp_train_fn, make_schedule_fn,
                                       make_sharded_schedule_fn,
                                       make_sharded_train_fn, make_train_fn,
                                       train_init)

@@ -136,15 +136,12 @@ class FlexAIAgent:
 
     # ------------------------------------------------------------------
     def save_weights(self, path: str) -> None:
-        np.savez(path, **{f"p{i}": np.asarray(w)
-                          for i, w in enumerate(self.learner.eval_p)})
+        from repro.core.flexai.dqn import save_dqn_npz
+        save_dqn_npz(path, self.learner.eval_p)
 
     def load_weights(self, path: str) -> None:
-        from repro.core.flexai.dqn import DQNParams
-        import jax.numpy as jnp
-        data = np.load(path)
-        params = DQNParams(*[jnp.asarray(data[f"p{i}"])
-                             for i in range(len(data.files))])
+        from repro.core.flexai.dqn import load_dqn_npz
+        params = load_dqn_npz(path)
         self.learner.eval_p = params
         self.learner.targ_p = params
 

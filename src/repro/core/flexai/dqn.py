@@ -64,13 +64,17 @@ def _adam_init(params: DQNParams) -> AdamState:
     return AdamState(jnp.zeros((), jnp.int32), z, z)
 
 
-def dqn_td_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
-                  batch: dict, gamma: float = 0.95, lr: float = 0.01):
-    """One TD update on a replay batch — pure (unjitted), so the scan
-    engine can inline it in a ``lax.scan`` body.
+def dqn_td_grads(eval_p: DQNParams, targ_p: DQNParams, batch: dict,
+                 gamma: float = 0.95):
+    """TD loss + norm-clipped gradients on a replay batch — the gradient
+    half of :func:`dqn_td_update`, split out so the data-parallel trainer
+    can all-reduce (``lax.pmean``) the clipped gradients across route
+    shards before the shared Adam application.
 
     batch: s [B,D], a [B], r [B], s_next [B,D], done [B].
-    Returns (new_eval_p, new_opt, loss).
+    Returns (loss, grads) with the 10.0 global-norm clip already applied
+    (clip-then-average: each shard clips its local batch's gradient, so a
+    single diverging shard cannot blow up the synchronized step).
     """
 
     def loss_fn(p):
@@ -95,6 +99,14 @@ def dqn_td_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
                          for g in jax.tree_util.tree_leaves(grads)))
     clip = jnp.minimum(1.0, 10.0 / jnp.maximum(gnorm, 1e-9))
     grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+    return loss, grads
+
+
+def adam_apply(eval_p: DQNParams, opt: AdamState, grads: DQNParams,
+               lr: float = 0.01):
+    """The Adam half of :func:`dqn_td_update`: one optimizer step on
+    already-clipped (and, in the DP trainer, already all-reduced)
+    gradients.  Returns (new_eval_p, new_opt)."""
     step = opt.step + 1
     b1, b2, eps = 0.9, 0.999, 1e-8
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
@@ -110,7 +122,20 @@ def dqn_td_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
     new_p = DQNParams(*[r[0] for r in results])
     new_m = DQNParams(*[r[1] for r in results])
     new_v = DQNParams(*[r[2] for r in results])
-    return new_p, AdamState(step, new_m, new_v), loss
+    return new_p, AdamState(step, new_m, new_v)
+
+
+def dqn_td_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
+                  batch: dict, gamma: float = 0.95, lr: float = 0.01):
+    """One TD update on a replay batch — pure (unjitted), so the scan
+    engine can inline it in a ``lax.scan`` body.
+
+    batch: s [B,D], a [B], r [B], s_next [B,D], done [B].
+    Returns (new_eval_p, new_opt, loss).
+    """
+    loss, grads = dqn_td_grads(eval_p, targ_p, batch, gamma=gamma)
+    new_p, new_opt = adam_apply(eval_p, opt, grads, lr=lr)
+    return new_p, new_opt, loss
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "lr"))
@@ -118,6 +143,22 @@ def dqn_update(eval_p: DQNParams, targ_p: DQNParams, opt: AdamState,
                batch: dict, *, gamma: float = 0.95, lr: float = 0.01):
     """Jitted host-loop entry point around ``dqn_td_update``."""
     return dqn_td_update(eval_p, targ_p, opt, batch, gamma=gamma, lr=lr)
+
+
+def save_dqn_npz(path: str, params: DQNParams) -> None:
+    """THE checkpoint format (p0..p5 EvalNet arrays) — shared by
+    ``FlexAIAgent`` and ``ScanFlexAI`` so the loop and fused trainers
+    stay freely interchangeable."""
+    import numpy as np
+    np.savez(path, **{f"p{i}": np.asarray(w)
+                      for i, w in enumerate(params)})
+
+
+def load_dqn_npz(path: str) -> DQNParams:
+    import numpy as np
+    data = np.load(path)
+    return DQNParams(*[jnp.asarray(data[f"p{i}"])
+                       for i in range(len(data.files))])
 
 
 class DQNLearner:

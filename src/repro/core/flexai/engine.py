@@ -25,11 +25,13 @@ import time
 from typing import NamedTuple
 
 import jax
+import jax.flatten_util  # noqa: F401  (jax.flatten_util.ravel_pytree)
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flexai.dqn import (AdamState, DQNParams, _adam_init,
-                                   dqn_td_update, init_qnet, qnet_apply)
+                                   adam_apply, dqn_td_grads, dqn_td_update,
+                                   init_qnet, qnet_apply)
 from repro.core.flexai.replay import (DeviceReplay, device_replay_add,
                                       device_replay_init,
                                       device_replay_sample)
@@ -38,7 +40,8 @@ from repro.core.platform_jax import (PlatformSpec, kind_feature_table,
                                      platform_init, platform_step,
                                      spec_from_platform, state_vector,
                                      summarize)
-from repro.core.tasks import TaskArrays, stack_task_arrays, tasks_to_arrays
+from repro.core.tasks import (TaskArrays, pad_task_arrays,
+                              stack_task_arrays, tasks_to_arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -138,11 +141,13 @@ def _train_run(spec: PlatformSpec, cfg):
     n_actions = spec.n
 
     def body(carry, x):
-        ts, plat = carry
+        # sv rides the carry: nsv computed at step i-1 IS step i's
+        # observation (same platform state, same task row), so each step
+        # builds exactly one state vector instead of two
+        ts, plat, sv = carry
         task, nxt_task, done = x
         key, k_eps, k_act, k_smp = jax.random.split(ts.key, 4)
 
-        sv = state_vector(spec, feat, cfg.backlog_scale, plat, task)
         frac = jnp.minimum(
             1.0, ts.env_steps.astype(jnp.float32)
             / max(cfg.eps_decay_steps, 1))
@@ -184,7 +189,7 @@ def _train_run(spec: PlatformSpec, cfg):
         ts2 = TrainState(eval_p=eval_p, targ_p=targ_p, opt=opt,
                          replay=replay, env_steps=env_steps,
                          updates=updates, key=key)
-        return (ts2, plat2), (rec, loss, do_update)
+        return (ts2, plat2, nsv), (rec, loss, do_update)
 
     def run(ts: TrainState, tasks: TaskArrays):
         # S_{i+1} pairs with the *next valid* task; the last valid task
@@ -199,8 +204,11 @@ def _train_run(spec: PlatformSpec, cfg):
             tasks)
         t = tasks.arrival.shape[0]
         done = jnp.arange(t) == tasks.valid.sum() - 1
-        (ts_f, plat_f), (recs, losses, upd_mask) = jax.lax.scan(
-            body, (ts, platform_init(spec.n)), (tasks, nxt, done))
+        plat0 = platform_init(spec.n)
+        sv0 = state_vector(spec, feat, cfg.backlog_scale, plat0,
+                           jax.tree_util.tree_map(lambda a: a[0], tasks))
+        (ts_f, plat_f, _), (recs, losses, upd_mask) = jax.lax.scan(
+            body, (ts, plat0, sv0), (tasks, nxt, done))
         return ts_f, plat_f, recs, losses, upd_mask
 
     return run
@@ -244,27 +252,242 @@ def make_sharded_train_fn(spec: PlatformSpec, cfg, mesh,
 
 
 # ---------------------------------------------------------------------------
+# data-parallel fused training (one synchronized agent over route shards)
+# ---------------------------------------------------------------------------
+
+def dp_train_init(key, state_dim: int, n_actions: int, replay_capacity: int,
+                  lanes: int) -> TrainState:
+    """TrainState for the data-parallel trainer: ONE shared agent
+    (EvalNet/TargNet/Adam/counters/key exactly as :func:`train_init`) plus
+    a stacked [lanes, ...] replay ring — one ring per route lane, so each
+    lane's TD batch samples its own trajectory and the gradients are
+    averaged (the data-parallel global batch)."""
+    params = init_qnet(key, state_dim, n_actions)
+    return TrainState(
+        eval_p=params, targ_p=params, opt=_adam_init(params),
+        replay=jax.vmap(
+            lambda _: device_replay_init(replay_capacity, state_dim)
+        )(jnp.arange(lanes)),
+        env_steps=jnp.int32(0), updates=jnp.int32(0),
+        key=jax.random.fold_in(key, 1),
+    )
+
+
+def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
+                  n_shards: int = 1):
+    """Un-jitted data-parallel fused episode over ``lanes`` local routes.
+
+    Unlike :func:`_train_run` (N *independent* population agents), every
+    lane — and, when ``axis`` names a mesh axis under ``shard_map``, every
+    device — advances ONE synchronized agent:
+
+    * acting / platform stepping / replay writes are per-lane (vmapped);
+    * each lane samples a TD batch from its own ring, computes the clipped
+      gradient, and the gradients are averaged over local lanes and
+      ``lax.pmean``-ed over the mesh axis before a single shared Adam step;
+    * the epsilon schedule, update cadence and TargNet sync run on *global*
+      counters (``lax.psum`` of per-shard valid-task counts), so every
+      shard takes the identical parameter trajectory.
+
+    The TD gradient is computed every scan step and the application masked
+    with ``where(do_update, ...)`` instead of ``lax.cond`` — the collective
+    must execute unconditionally on all shards, and a conditioned ``pmean``
+    would deadlock the mesh whenever shards disagreed.
+
+    With ``axis=None``, 1 lane, and the same route, the trajectory
+    reproduces :func:`_train_run` (the DP parity contract in
+    tests/test_dp_trainer.py): global lane 0 consumes the per-step PRNG
+    keys raw, exactly like the single-lane body, while lane g > 0 folds g
+    in for exploration/sampling diversity.
+    """
+    feat = jnp.asarray(kind_feature_table())
+    n_actions = spec.n
+
+    if axis is None:
+        psum = pmean = lambda x: x
+        n_shards = 1
+    else:
+        psum = functools.partial(jax.lax.psum, axis_name=axis)
+        pmean = functools.partial(jax.lax.pmean, axis_name=axis)
+
+    def body(gidx, carry, x):
+        ts, plats, svs = carry              # svs: step i's observations
+        task, nxt_task, done = x            # leaves [lanes]
+        key, k_eps, k_act, k_smp = jax.random.split(ts.key, 4)
+
+        def lane_keys(k):
+            ks = jax.vmap(lambda g: jax.random.fold_in(k, g))(gidx)
+            return jnp.where((gidx == 0)[:, None], k[None, :], ks)
+
+        frac = jnp.minimum(
+            1.0, ts.env_steps.astype(jnp.float32)
+            / max(cfg.eps_decay_steps, 1))
+        eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+
+        def act_step(plat, sv, trow, nrow, ke, ka):
+            explore = jax.random.uniform(ke) < eps
+            greedy = jnp.argmax(qnet_apply(ts.eval_p, sv))
+            action = jnp.where(
+                explore, jax.random.randint(ka, (), 0, n_actions),
+                greedy).astype(jnp.int32)
+            plat2, rec = platform_step(spec, plat, trow, action)
+            reward = reward_from_states(spec, plat, plat2)
+            nsv = state_vector(spec, feat, cfg.backlog_scale, plat2, nrow)
+            return plat2, rec, action, reward, nsv
+
+        plats2, recs, actions, rewards, nsvs = jax.vmap(act_step)(
+            plats, svs, task, nxt_task, lane_keys(k_eps), lane_keys(k_act))
+        replay = jax.vmap(device_replay_add)(
+            ts.replay, svs, actions, rewards, nsvs,
+            done.astype(jnp.float32), task.valid)
+
+        batches = jax.vmap(
+            lambda b, k: device_replay_sample(b, k, cfg.batch_size)
+        )(replay, lane_keys(k_smp))
+        losses, grads = jax.vmap(
+            lambda b: dqn_td_grads(ts.eval_p, ts.targ_p, b, gamma=cfg.gamma)
+        )(batches)
+        # ONE collective per scan step: per-step all-reduce barriers
+        # dominate the sharded step cost on oversubscribed hosts, so the
+        # update-gate counters ride the gradient pmean as f32
+        # (pre-scaled by n_shards: pmean(x * n) == psum(x), exact in f32
+        # for these small integers)
+        stats = jnp.stack([
+            task.valid.astype(jnp.float32).sum(),
+            (replay.size.min() >= cfg.min_replay).astype(jnp.float32),
+        ]) * float(n_shards)
+        flat, unravel = jax.flatten_util.ravel_pytree(
+            (stats, losses.mean(),
+             jax.tree_util.tree_map(lambda g: g.mean(0), grads)))
+        stats, loss, grads = unravel(pmean(flat))
+        env_steps = ts.env_steps + stats[0].astype(jnp.int32)
+        # cadence = update_every-boundary CROSSING, not an exact-multiple
+        # check: env_steps advances by the global valid-lane count per
+        # scan step, so `env_steps % update_every == 0` would alias
+        # (e.g. 4 lanes with update_every=3 lands on a multiple only
+        # every third step — a 6x silent under-training).  For one lane
+        # the crossing test reduces exactly to the single-lane modulo.
+        crossed = (env_steps // cfg.update_every
+                   > ts.env_steps // cfg.update_every)
+        do_update = crossed & (stats[1] == float(n_shards))
+        new_p, new_opt = adam_apply(ts.eval_p, ts.opt, grads, lr=cfg.lr)
+
+        updates = ts.updates + do_update.astype(jnp.int32)
+        sync = do_update & (updates % cfg.target_sync_every == 0)
+        keep = lambda n, o: jnp.where(do_update, n, o)  # noqa: E731
+        eval_p = jax.tree_util.tree_map(keep, new_p, ts.eval_p)
+        opt = jax.tree_util.tree_map(keep, new_opt, ts.opt)
+        targ_p = jax.tree_util.tree_map(
+            lambda e, t: jnp.where(sync, e, t), eval_p, ts.targ_p)
+        ts2 = TrainState(eval_p=eval_p, targ_p=targ_p, opt=opt,
+                         replay=replay, env_steps=env_steps,
+                         updates=updates, key=key)
+        return (ts2, plats2, nsvs), (recs, jnp.where(do_update, loss, 0.0),
+                                     do_update)
+
+    def run(ts: TrainState, tasks: TaskArrays):
+        # global lane ids: shard i owns contiguous lanes [i*lanes, ...)
+        # (shard_map block partitioning); global lane 0 keeps the raw
+        # per-step keys so the 1-shard trajectory matches _train_run
+        base = 0 if axis is None else jax.lax.axis_index(axis) * lanes
+        gidx = base + jnp.arange(lanes)
+        next_valid = jnp.concatenate(
+            [tasks.valid[:, 1:], jnp.zeros((lanes, 1), bool)], axis=1)
+        nxt = jax.tree_util.tree_map(
+            lambda a: jnp.where(
+                next_valid,
+                jnp.concatenate([a[:, 1:], a[:, -1:]], axis=1), a),
+            tasks)
+        t = tasks.arrival.shape[1]
+        done = jnp.arange(t)[None, :] == \
+            tasks.valid.sum(axis=1, keepdims=True) - 1
+        plats0 = jax.vmap(lambda _: platform_init(spec.n))(jnp.arange(lanes))
+        svs0 = jax.vmap(
+            lambda p, trow: state_vector(spec, feat, cfg.backlog_scale,
+                                         p, trow)
+        )(plats0, jax.tree_util.tree_map(lambda a: a[:, 0], tasks))
+        xs = jax.tree_util.tree_map(
+            lambda a: jnp.swapaxes(a, 0, 1), (tasks, nxt, done))
+        (ts_f, plat_f, _), (recs, losses, upd) = jax.lax.scan(
+            functools.partial(body, gidx), (ts, plats0, svs0), xs)
+        recs = jax.tree_util.tree_map(
+            lambda a: jnp.swapaxes(a, 0, 1), recs)
+        return ts_f, plat_f, recs, losses, upd
+
+    return run
+
+
+def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
+                     axis: str = "routes"):
+    """Compile the data-parallel fused trainer.
+
+    Returns ``fn(train_state, tasks) -> (train_state, platform_states,
+    records, losses, update_mask)`` where ``train_state`` comes from
+    :func:`dp_train_init` (shared agent + [lanes, ...] replay) and
+    ``tasks`` is a [lanes, T] route batch — the data-parallel global
+    batch.  ``records`` / ``platform_states`` keep the [lanes, ...] route
+    axis; ``losses`` / ``update_mask`` are [T], shared by construction.
+
+    With ``mesh``, the lane axis shards over ``mesh``'s ``axis``
+    (``lanes`` must be a multiple of the mesh size): each device runs its
+    local routes and the per-step gradient all-reduce keeps every shard on
+    one synchronized agent — the scale-out recipe of MaxText-style JAX
+    trainers, on the platform substrate.
+    """
+    if mesh is None:
+        return jax.jit(_dp_train_run(spec, cfg, lanes))
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    if lanes < 1 or lanes % mesh.size:
+        raise ValueError(f"lanes={lanes} must be a positive multiple of "
+                         f"the mesh size {mesh.size}")
+    run = _dp_train_run(spec, cfg, lanes // mesh.size, axis=axis,
+                        n_shards=mesh.size)
+    ts_specs = TrainState(eval_p=P(), targ_p=P(), opt=P(), replay=P(axis),
+                          env_steps=P(), updates=P(), key=P())
+    sharded = shard_map(run, mesh=mesh, in_specs=(ts_specs, P(axis)),
+                        out_specs=(ts_specs, P(axis), P(axis), P(), P()))
+    return jax.jit(sharded)
+
+
+# ---------------------------------------------------------------------------
 # host-side wrapper
 # ---------------------------------------------------------------------------
 
 class ScanFlexAI:
     """FlexAI with the device-resident engine: ``FlexAIAgent``'s surface
-    (train over queues, greedy schedule, weight export) at one device
-    dispatch per route — or per route *batch* with ``lanes > 1``.
+    (train over queues, greedy schedule, weight import/export) at one
+    device dispatch per route — or per route *batch* with ``lanes > 1``.
 
-    With ``mesh`` (a 1-D device mesh), the lane batch is sharded over the
-    mesh: each device trains ``lanes / mesh.size`` independent agents.
+    Two multi-lane training modes:
+
+    * ``dp=False`` (default): ``lanes`` *independent* population agents,
+      one per lane (N seeds x N routes per device call).  With ``mesh``
+      (a 1-D device mesh) the lane batch shards over the mesh.
+    * ``dp=True``: ONE synchronized agent trained data-parallel over a
+      ``lanes``-route global batch (per-lane TD gradients averaged, and —
+      with ``mesh`` — ``lax.pmean``-ed across devices each step).
     """
 
-    def __init__(self, platform, cfg, lanes: int = 1, mesh=None):
+    def __init__(self, platform, cfg, lanes: int = 1, mesh=None,
+                 dp: bool = False):
         self.cfg = cfg
         self.spec = spec_from_platform(platform)
         self.n_actions = platform.n
         self.state_dim = 3 + 5 * platform.n
         self.lanes = lanes
         self.mesh = mesh
+        self.dp = dp
         key = jax.random.PRNGKey(cfg.seed)
-        if lanes == 1:
+        if dp:
+            self.ts = dp_train_init(key, self.state_dim, self.n_actions,
+                                    cfg.replay_capacity, lanes)
+            self._train_fn = make_dp_train_fn(
+                self.spec, cfg, lanes, mesh=mesh,
+                axis=mesh.axis_names[0] if mesh is not None else "routes")
+        elif lanes == 1:
             self.ts = train_init(key, self.state_dim, self.n_actions,
                                  cfg.replay_capacity)
         else:
@@ -272,21 +495,24 @@ class ScanFlexAI:
                 lambda k: train_init(k, self.state_dim, self.n_actions,
                                      cfg.replay_capacity)
             )(jax.random.split(key, lanes))
-        if mesh is not None:
-            # lanes == 1 keeps an unstacked TrainState, which the vmapped
-            # sharded runner cannot consume — and a sharded single lane is
-            # pointless anyway
-            if lanes < 2 or lanes % mesh.size:
-                raise ValueError(
-                    f"lanes={lanes} must be >= 2 and a multiple of the "
-                    f"mesh size {mesh.size} (omit mesh for single-lane)")
-            self._train_fn = make_sharded_train_fn(self.spec, cfg, mesh,
-                                                   axis=mesh.axis_names[0])
-        else:
-            self._train_fn = make_train_fn(self.spec, cfg,
-                                           batched=lanes > 1)
+        if not dp:
+            if mesh is not None:
+                # lanes == 1 keeps an unstacked TrainState, which the
+                # vmapped sharded runner cannot consume — and a sharded
+                # single lane is pointless anyway
+                if lanes < 2 or lanes % mesh.size:
+                    raise ValueError(
+                        f"lanes={lanes} must be >= 2 and a multiple of the "
+                        f"mesh size {mesh.size} (omit mesh for single-lane)")
+                self._train_fn = make_sharded_train_fn(
+                    self.spec, cfg, mesh, axis=mesh.axis_names[0])
+            else:
+                self._train_fn = make_train_fn(self.spec, cfg,
+                                               batched=lanes > 1)
         self._sched_fn = make_schedule_fn(self.spec, cfg.backlog_scale)
+        self._eval_fn = None
         self.losses: list[float] = []
+        self.best_eval_stm: float | None = None
 
     def _as_arrays(self, tasks) -> TaskArrays:
         return tasks if isinstance(tasks, TaskArrays) else \
@@ -300,10 +526,24 @@ class ScanFlexAI:
                 stack_task_arrays([self._as_arrays(q) for q in tasks])
         else:
             ta = self._as_arrays(tasks)
+            if self.dp:  # the DP runner always carries a [lanes, T] axis
+                ta = TaskArrays(*[np.asarray(f)[None] for f in ta])
         self.ts, plat, recs, losses, upd = self._train_fn(self.ts, ta)
         losses, upd = np.asarray(losses), np.asarray(upd, bool)
         if upd.any():
             self.losses.extend(losses[upd].tolist())
+        if self.dp:
+            mean_loss = float(losses[upd].mean()) if upd.any() else None
+            summ = [summarize(
+                self.spec,
+                jax.tree_util.tree_map(lambda a, i=i: a[i], plat),
+                jax.tree_util.tree_map(lambda a, i=i: a[i], recs))
+                for i in range(self.lanes)]
+            if self.lanes == 1:
+                s = summ[0]
+                s["mean_loss"] = mean_loss
+                return s
+            return {"lanes": summ, "mean_loss": mean_loss}
         if self.lanes > 1:
             summ = []
             for i in range(self.lanes):
@@ -320,25 +560,129 @@ class ScanFlexAI:
         s["mean_loss"] = float(losses[upd].mean()) if upd.any() else None
         return s
 
-    def train(self, queues: list, episodes: int) -> list:
+    def train(self, queues: list, episodes: int, eval_queue=None,
+              eval_every: int = 5) -> list:
         """Cycle the queue pool; with ``lanes > 1`` each episode consumes
-        the next ``lanes`` routes round-robin, one per lane."""
+        the next ``lanes`` routes round-robin, one per lane.
+
+        With ``eval_queue``, periodically runs a vmapped greedy eval on
+        the held-out queue between fused episode segments and keeps the
+        best-eval EvalNet weights (the scan-path counterpart of
+        ``FlexAIAgent.train``'s model selection); the winner is restored
+        into EvalNet/TargNet once training ends.
+        """
         routes = [self._as_arrays(q) for q in queues]
+        if self.lanes > 1 or self.dp:
+            # shared static length -> one compiled episode per lane batch.
+            # Single-lane pools stay unpadded: padding rows are training
+            # no-ops but still consume per-step PRNG splits, which would
+            # shift the exploration stream of every later episode.
+            t_max = max(r.arrival.shape[-1] for r in routes)
+            routes = [pad_task_arrays(r, t_max)
+                      if r.arrival.shape[-1] < t_max else r
+                      for r in routes]
+        ta_eval = self._as_arrays(eval_queue) \
+            if eval_queue is not None else None
         history = []
+        best_stm, best_params = -1.0, None
+        per_lane = 1 if (self.lanes == 1 and not self.dp) else self.lanes
         for ep in range(episodes):
-            if self.lanes == 1:
+            if per_lane == 1:
                 history.append(self.train_episode(routes[ep % len(routes)]))
             else:
                 lane_routes = [
-                    routes[(ep * self.lanes + i) % len(routes)]
-                    for i in range(self.lanes)]
+                    routes[(ep * per_lane + i) % len(routes)]
+                    for i in range(per_lane)]
                 history.append(self.train_episode(lane_routes))
+            if ta_eval is not None and (ep + 1) % eval_every == 0:
+                stms = self._eval_stms(ta_eval)
+                history[-1]["eval_stm"] = (
+                    stms[0] if len(stms) == 1 else stms)
+                lane = int(np.argmax(stms))
+                if stms[lane] > best_stm:
+                    best_stm = stms[lane]
+                    best_params = self.eval_params(lane)
+        if best_params is not None:
+            self.set_params(best_params)
+            self.best_eval_stm = best_stm
         return history
 
+    def _eval_stms(self, ta_eval: TaskArrays) -> list[float]:
+        """Greedy STM rate on the held-out queue, per candidate parameter
+        set: one entry for the shared agent (single-lane / DP), one per
+        lane for population training (params vmapped over lanes, queue
+        broadcast — a single device dispatch either way)."""
+        if self.dp or self.lanes == 1:
+            final, recs = self._sched_fn(self.eval_params(), ta_eval)
+            return [summarize(self.spec, final, recs)["stm_rate"]]
+        if self._eval_fn is None:
+            self._eval_fn = jax.jit(jax.vmap(
+                _schedule_run(self.spec, self.cfg.backlog_scale),
+                in_axes=(0, None)))
+        finals, recs = self._eval_fn(self.ts.eval_p, ta_eval)
+        return [summarize(
+            self.spec,
+            jax.tree_util.tree_map(lambda a, i=i: a[i], finals),
+            jax.tree_util.tree_map(lambda a, i=i: a[i], recs))["stm_rate"]
+            for i in range(self.lanes)]
+
     def eval_params(self, lane: int = 0) -> DQNParams:
-        if self.lanes == 1:
+        if self.dp or self.lanes == 1:
             return self.ts.eval_p
         return jax.tree_util.tree_map(lambda a: a[lane], self.ts.eval_p)
+
+    # ------------------------------------------------------------------
+    # weight interop with FlexAIAgent (shared npz checkpoint format)
+    # ------------------------------------------------------------------
+
+    def set_params(self, params: DQNParams) -> None:
+        """Install EvalNet weights (TargNet synced, Adam reset — importing
+        mid-run optimizer moments across trainers is meaningless).  With
+        population lanes the weights broadcast to every lane."""
+        if self.dp or self.lanes == 1:
+            eval_p = params
+        else:
+            eval_p = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a, (self.lanes,) + a.shape).copy(),
+                params)
+        self.ts = self.ts._replace(
+            eval_p=eval_p, targ_p=eval_p,
+            opt=jax.tree_util.tree_map(jnp.zeros_like, self.ts.opt))
+
+    @classmethod
+    def from_agent(cls, agent, platform, *, lanes: int = 1, mesh=None,
+                   dp: bool = False, cfg=None) -> "ScanFlexAI":
+        """Lossless import of a ``FlexAIAgent``: same config (unless
+        overridden), same EvalNet/TargNet weights, ready to continue
+        training on the fused path."""
+        trainer = cls(platform, cfg if cfg is not None else agent.cfg,
+                      lanes=lanes, mesh=mesh, dp=dp)
+        trainer.set_params(agent.learner.eval_p)
+        trainer.losses = list(agent.losses)
+        return trainer
+
+    def to_agent(self, platform, lane: int = 0):
+        """Lossless export to a ``FlexAIAgent`` (the Python-loop wrapper):
+        the greedy policy — and therefore every placement — is preserved
+        bit-exactly."""
+        from repro.core.flexai.agent import FlexAIAgent
+        agent = FlexAIAgent(platform, self.cfg)
+        params = self.eval_params(lane)
+        agent.learner.eval_p = params
+        agent.learner.targ_p = params
+        agent.losses = list(self.losses)
+        return agent
+
+    def save_weights(self, path: str, lane: int = 0) -> None:
+        """``FlexAIAgent.save_weights``-compatible npz (p0..p5 arrays,
+        one shared serializer in ``dqn.py``)."""
+        from repro.core.flexai.dqn import save_dqn_npz
+        save_dqn_npz(path, self.eval_params(lane))
+
+    def load_weights(self, path: str) -> None:
+        from repro.core.flexai.dqn import load_dqn_npz
+        self.set_params(load_dqn_npz(path))
 
     def schedule(self, tasks, lane: int = 0) -> dict:
         ta = self._as_arrays(tasks)

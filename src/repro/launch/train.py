@@ -7,11 +7,23 @@ Runs the fault-tolerant training driver (checkpoint every N steps, SIGTERM
 preemption handling, deterministic restart).  On a real pod the same entry
 point runs per host with jax.distributed initialization; on this container
 it exercises the identical code path on the local device.
+
+With ``--flexai`` the launcher instead trains the FlexAI scheduling agent
+on the device-resident fused engine (the "long offline run" producing the
+benchmark checkpoints) — data-parallel over all visible devices with
+``--dp --shard``:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.train --flexai --area UB \
+        --episodes 100 --dp --dp-lanes 4 --shard \
+        --weights experiments/flexai/agent_ub.npz
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import time
 
 import jax
 import numpy as np
@@ -25,9 +37,86 @@ from repro.train.fault_tolerance import (PreemptionGuard, elastic_restore,
 from repro.train.loop import TrainHyper, init_train_state, make_train_step
 
 
+def run_flexai_training(args) -> int:
+    """Device-resident FlexAI training: fused episodes, optional
+    data-parallel sharding, eval-based model selection, npz checkpoint
+    (+ loss-history sidecar) shared with ``FlexAIAgent``."""
+    from repro.compat import make_mesh
+    from repro.core.environment import (Area, EnvironmentParams,
+                                        build_task_queue)
+    from repro.core.flexai import FlexAIConfig, ScanFlexAI
+    from repro.core.hmai import HMAIPlatform
+
+    cfg = FlexAIConfig(lr=args.lr, gamma=0.98, min_replay=256,
+                       update_every=2, eps_decay_steps=40_000,
+                       target_sync_every=500, seed=args.seed)
+    plat = HMAIPlatform(capacity_scale=args.rate_scale)
+    mesh = None
+    if args.shard:
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("routes",))
+        print(f"training mesh: {n_dev} device(s) on axis 'routes'")
+    lanes = args.dp_lanes if args.dp else 1
+    trainer = ScanFlexAI(plat, cfg, lanes=lanes, mesh=mesh, dp=args.dp)
+    if args.weights and os.path.exists(args.weights):
+        trainer.load_weights(args.weights)
+        print(f"resumed weights from {args.weights}")
+
+    area = Area(args.area)
+    queues = [build_task_queue(EnvironmentParams(
+        area=area, route_km=args.route_km,
+        rate_scale=args.rate_scale, seed=args.seed + i))
+        for i in range(args.routes)]
+    val_q = build_task_queue(EnvironmentParams(
+        area=area, route_km=args.route_km,
+        rate_scale=args.rate_scale, seed=args.seed + 50))
+    n_tasks = sum(len(q) for q in queues)
+    mode = f"dp lanes={lanes}" if args.dp else "single-lane"
+    print(f"flexai {mode}: {args.routes} routes / {n_tasks} tasks, "
+          f"{args.episodes} episodes, area={args.area}")
+
+    t0 = time.perf_counter()
+    history = trainer.train(queues, episodes=args.episodes,
+                            eval_queue=val_q, eval_every=args.eval_every)
+    dt = time.perf_counter() - t0
+    for ep, h in enumerate(history):
+        if "eval_stm" in h:
+            print(f"  episode {ep + 1}: eval_stm={h['eval_stm']}")
+    steps = int(np.asarray(trainer.ts.env_steps).sum())
+    print(f"trained {steps} env steps in {dt:.2f}s "
+          f"({steps / max(dt, 1e-9):.0f} steps/s), "
+          f"best_eval_stm={trainer.best_eval_stm}")
+    if args.weights:
+        os.makedirs(os.path.dirname(args.weights) or ".", exist_ok=True)
+        trainer.save_weights(args.weights)
+        np.save(args.weights[: -len(".npz")] + "_losses.npy",
+                np.asarray(trainer.losses, np.float64))
+        print(f"saved weights to {args.weights}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--flexai", action="store_true",
+                    help="train the FlexAI scheduling agent on the fused "
+                         "device-resident engine instead of an LLM arch")
+    ap.add_argument("--area", default="UB",
+                    help="[flexai] driving area (UB/UHW/HW)")
+    ap.add_argument("--episodes", type=int, default=50)
+    ap.add_argument("--routes", type=int, default=4)
+    ap.add_argument("--route-km", type=float, default=0.15)
+    ap.add_argument("--rate-scale", type=float, default=0.05)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--dp", action="store_true",
+                    help="[flexai] data-parallel trainer (one synchronized "
+                         "agent over a route batch)")
+    ap.add_argument("--dp-lanes", type=int, default=4)
+    ap.add_argument("--shard", action="store_true",
+                    help="[flexai] shard lanes over all visible devices")
+    ap.add_argument("--weights", default=None,
+                    help="[flexai] npz checkpoint to resume from / save to")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
@@ -40,6 +129,18 @@ def main(argv=None) -> int:
                     choices=["none", "bf16", "int8_ef"])
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.flexai:
+        if args.shard and not args.dp:
+            ap.error("--shard requires --dp: sharding splits the DP "
+                     "route batch (use --dp-lanes for its width)")
+        if args.weights and not args.weights.endswith(".npz"):
+            # np.savez appends .npz on write; normalize up front so the
+            # resume check and the loss-sidecar path see the real file
+            args.weights += ".npz"
+        return run_flexai_training(args)
+    if args.arch is None:
+        ap.error("--arch is required (unless --flexai)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     api = model_api(cfg)

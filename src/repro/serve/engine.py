@@ -150,6 +150,16 @@ class ServeEngine:
     the property the compiled/sharded step needs on real hardware.  When a
     wave drains, the next wave is admitted (continuous batching at wave
     granularity).
+
+    Admission is length-aware rather than strict FIFO: a wave's cost is its
+    *longest* member (lockstep decode + common prompt padding), so queued
+    requests are bucketed by total length (prompt + budget, power-of-two)
+    and each wave greedily packs the bucket of the oldest queued request —
+    FIFO across waves at head granularity (no starvation: the oldest
+    request is always admitted) and FIFO within a bucket, but a short
+    request queued behind a long one rides a short wave instead of paying
+    the long wave's decode steps.  ``wave_log`` records the admitted uid
+    groups for observability/tests.
     """
 
     def __init__(self, api: ModelAPI, params, *, slots: int, max_seq: int,
@@ -167,6 +177,7 @@ class ServeEngine:
         self._decode = jax.jit(api.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(api.prefill)
         self.steps_executed = 0
+        self.wave_log: list[list[int]] = []
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -193,9 +204,28 @@ class ServeEngine:
 
         return jax.tree_util.tree_map(merge, zero, prefill_cache)
 
+    @staticmethod
+    def _length_bucket(req: Request) -> int:
+        """Power-of-two bucket of the request's total token budget — the
+        quantity that sets its wave's lockstep cost."""
+        total = max(len(req.prompt) + req.max_new_tokens, 1)
+        return 1 << (total - 1).bit_length()
+
     def _next_wave(self) -> list[Request]:
-        wave = self.queue[: self.slots]
-        del self.queue[: len(wave)]
+        # greedy bin-pack: the oldest request picks the wave's length
+        # bucket, then the wave fills with that bucket's requests in FIFO
+        # order (slots not fillable from the bucket stay padded — mixing
+        # buckets would stretch every short member to the longest)
+        bucket = self._length_bucket(self.queue[0])
+        wave, rest = [], []
+        for req in self.queue:
+            if (len(wave) < self.slots
+                    and self._length_bucket(req) == bucket):
+                wave.append(req)
+            else:
+                rest.append(req)
+        self.queue = rest
+        self.wave_log.append([r.uid for r in wave])
         while len(wave) < self.slots:  # pad the wave with dummy requests
             wave.append(Request(uid=-1, prompt=np.array([self.pad_token],
                                                         np.int32),

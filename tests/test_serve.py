@@ -33,6 +33,41 @@ def test_wave_serving_completes():
     assert all(len(r.generated) == 4 for r in eng.finished)
 
 
+def test_short_request_not_starved_by_long():
+    """Length-aware packing: a short request queued behind a long one is
+    grouped with its length peers instead of padding into the long wave's
+    lockstep decode; admission stays FIFO within a bucket and the oldest
+    request is always admitted (no starvation)."""
+    eng = _engine(slots=2)
+    long_a = Request(uid=0, prompt=np.arange(1, 13, dtype=np.int32),
+                     max_new_tokens=12)
+    short_b = Request(uid=1, prompt=np.array([1, 2], np.int32),
+                      max_new_tokens=2)
+    short_c = Request(uid=2, prompt=np.array([3, 4], np.int32),
+                      max_new_tokens=2)
+    long_d = Request(uid=3, prompt=np.arange(1, 13, dtype=np.int32),
+                     max_new_tokens=12)
+    for r in (long_a, short_b, short_c, long_d):
+        eng.submit(r)
+    eng.run_until_done()
+    assert len(eng.finished) == 4
+    assert all(len(r.generated) == r.max_new_tokens for r in eng.finished)
+    # wave 1: the longs pack together (oldest request picks the bucket);
+    # wave 2: the shorts share their own cheap wave
+    assert eng.wave_log == [[0, 3], [1, 2]]
+
+
+def test_fifo_within_bucket_and_oldest_first():
+    """Uniform-length requests degrade to plain FIFO waves."""
+    eng = _engine(slots=2)
+    for uid in range(5):
+        eng.submit(Request(uid=uid,
+                           prompt=np.array([1 + uid, 2, 3], np.int32),
+                           max_new_tokens=4))
+    eng.run_until_done()
+    assert eng.wave_log == [[0, 1], [2, 3], [4]]
+
+
 def test_greedy_decode_deterministic():
     eng1 = _engine()
     eng2 = _engine()
