@@ -1,9 +1,31 @@
-"""Figure 13: safety-time meet rate (STMRate) per task queue per scheduler."""
+"""Figure 13: safety-time meet rate (STMRate) per task queue per scheduler.
+
+The ``flexai_served`` variant re-measures FlexAI's STM rate *through the
+serving boundary* (``repro.serve.qos``, EDF admission): the paper's "100%
+within period" claim is only meaningful if the rate survives wave
+admission, queueing and preemption — not just the bare scheduler loop.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import platform, queues_for, row, save, trained_flexai
+
+
+def _served_stm(agent, queues, deadline_scale: float) -> dict:
+    """Serve the fig-13 queues through the deadline-aware engine and read
+    the STM rate off the completed placements (serving-boundary STM)."""
+    from repro.serve.qos import QoSConfig, QoSPlacementEngine
+    eng = QoSPlacementEngine(
+        platform(), agent.learner.eval_p,
+        QoSConfig(policy="edf", slots=2, deadline_scale=deadline_scale),
+        backlog_scale=agent.cfg.backlog_scale)
+    t = 0.0
+    for q in queues:
+        eng.submit(q, arrival=t)
+        t += 0.05
+    eng.run_until_done()
+    return eng.stats()
 
 
 def run(quick: bool = True) -> list:
@@ -24,8 +46,20 @@ def run(quick: bool = True) -> list:
         p = platform()
         vals.append(agent.schedule(p, q)["stm_rate"])
     stm["flexai"] = float(np.mean(vals))
+    served = _served_stm(agent, queues, deadline_scale=1.0)
+    # task-weighted over the whole workload: shed routes count as unmet,
+    # so this rate is comparable to the schedulers that process every queue
+    stm["flexai_served"] = served["stm_rate_incl_shed"]
     for name, v in stm.items():
         rows.append(row(f"fig13/{name}/stm_rate", 0.0, round(v, 4)))
+    rows.append(row("fig13/flexai_served/deadline_miss_rate_1x", 0.0,
+                    round(served["miss_rate"], 4),
+                    paper="'basically 100% within required period' at the "
+                          "serving boundary, unrelaxed Table-5 budgets"))
+    relaxed = _served_stm(agent, queues, deadline_scale=2.0)
+    rows.append(row("fig13/flexai_served/deadline_miss_rate_2x", 0.0,
+                    round(relaxed["miss_rate"], 4),
+                    paper="same, with 2x-relaxed budgets (headroom check)"))
     order = sorted(stm, key=stm.get, reverse=True)
     rows.append(row("fig13/ranking", 0.0, ">".join(order),
                     paper="flexai ~100%, ata high, others lower"))

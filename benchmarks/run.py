@@ -21,6 +21,7 @@ MODULES = [
     "fig13_stmrate",
     "fig14_braking_distance",
     "scheduler_throughput",
+    "serve_qos",
     "metaheuristic_throughput",
     "sharded_engine",
     "training_throughput",

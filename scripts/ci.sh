@@ -20,17 +20,42 @@
 #    end and report fitness parity vs the oracle, and the training
 #    throughput module (loop vs fused vs DP) must report loss/eval
 #    parity across all three trainers.
+# 7. Serving-QoS gate: the property suite (hypothesis when installed,
+#    fixed-seed sweep otherwise, bounded example budget) plus the
+#    BENCH_serving.json contract — EDF-with-aging must never miss more
+#    deadlines than bucket-FIFO and must be strictly better overloaded.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 echo "== dev deps (hypothesis; best-effort) =="
 python -m pip install -q -r requirements-dev.txt \
-    || echo "pip install failed; property tests will be skipped"
+    || echo "pip install failed; property tests fall back to seeded sweeps"
 
-echo "== tier-1 suite (full run, gating) =="
-python -m pytest -q
+echo "== tier-1 suite (full run incl. slow subprocess tests, gating) =="
+# the serving property suite is excluded here: it runs once, with its own
+# bounded example budget, in the dedicated gate below
+python -m pytest -q --runslow --ignore=tests/test_serve_properties.py
 tier1=$?
+
+echo "== serving property contract (bounded example budget) =="
+SERVE_QOS_EXAMPLES=20 python -m pytest -q tests/test_serve_properties.py
+serve_prop=$?
+
+echo "== serving QoS smoke (EDF vs FIFO at 3 loads) =="
+python -m benchmarks.run --only serve_qos \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_serving.json"))
+ok = r["edf_never_worse"] and r["edf_strictly_better_at_high_load"]
+top = max(r["loads"], key=float)
+print(f"edf_never_worse={r['edf_never_worse']} "
+      f"strict_at_load_{top}={r['edf_strictly_better_at_high_load']} "
+      f"(edf {r['loads'][top]['edf']['miss_rate']:.3f} vs "
+      f"fifo {r['loads'][top]['fifo']['miss_rate']:.3f})")
+sys.exit(0 if ok else 1)
+EOF
+serve_bench=$?
 
 echo "== scan-engine parity gate (2 host devices) =="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
@@ -82,7 +107,8 @@ sys.exit(0 if ok else 1)
 EOF
 train_bench=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} bench_exit=${bench} train_bench_exit=${train_bench} =="
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} =="
 [ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
     && [ "${dp}" -eq 0 ] && [ "${bench}" -eq 0 ] \
-    && [ "${train_bench}" -eq 0 ]
+    && [ "${train_bench}" -eq 0 ] && [ "${serve_prop}" -eq 0 ] \
+    && [ "${serve_bench}" -eq 0 ]

@@ -114,6 +114,33 @@ def state_from_platform(platform) -> PlatformState:
     )
 
 
+def state_to_platform(state: PlatformState, platform) -> None:
+    """Restore a ``PlatformState`` snapshot into a live ``HMAIPlatform`` —
+    the inverse of :func:`state_from_platform`.
+
+    This is the resume half of the serving preemption seam: a preempted
+    wave checkpoints its device-side state, and either path (the scan
+    engines via ``state0=`` or the NumPy oracle via this restore) can
+    continue the route from the checkpoint.  ``records`` is bookkeeping
+    the snapshot does not carry; the restored platform keeps its own.
+    """
+    platform.avail = np.asarray(state.avail, np.float64).copy()
+    platform.busy = np.asarray(state.busy, np.float64).copy()
+    platform.E = np.asarray(state.E, np.float64).copy()
+    platform.T = np.asarray(state.T, np.float64).copy()
+    platform.MS = np.asarray(state.MS, np.float64).copy()
+    platform.R_Balance = np.asarray(state.R_Balance, np.float64).copy()
+    platform.num_tasks = np.asarray(state.num_tasks, np.int64).copy()
+    platform._e_scale = float(state.e_scale)
+    platform._t_scale = float(state.t_scale)
+
+
+def stack_states(states: list) -> PlatformState:
+    """Stack per-lane ``PlatformState``s into one [L, ...] batch (the
+    state0 layout of the vmapped resume path)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
 def platform_step(spec: PlatformSpec, state: PlatformState, task: TaskArrays,
                   action: jax.Array, valid=None
                   ) -> tuple[PlatformState, StepRecord]:

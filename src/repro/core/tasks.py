@@ -60,6 +60,53 @@ def task_features(task: Task) -> tuple[float, float, float]:
 
 
 # ---------------------------------------------------------------------------
+# serving deadlines (Table 5 period requirements)
+# ---------------------------------------------------------------------------
+
+# Table 5, urban go-straight row, split per model: the fleet must sustain
+# these aggregate FPS, so each submitted frame of a kind has 1/FPS seconds
+# of serving slack before the next frame of that kind lands.  (TL/RE rows
+# are tighter/looser by ~10%; GS is the steady-state requirement the
+# serving layer is sized for — scenario-specific tightening rides on
+# ``scale``.)
+TABLE5_FPS = {TaskKind.YOLO: 435.0, TaskKind.SSD: 435.0,
+              TaskKind.GOTURN: 840.0}
+
+
+def kind_period_s(kind: TaskKind) -> float:
+    """Required processing period (s/frame) for one task of ``kind``."""
+    return 1.0 / TABLE5_FPS[kind]
+
+
+@lru_cache(maxsize=1)
+def kind_period_table():
+    """[n_kinds] f32 periods in KIND_INDEX order (vectorized lookup for
+    ``TaskArrays.kind``)."""
+    import numpy as np
+    return np.asarray([kind_period_s(k) for k in KIND_ORDER], np.float32)
+
+
+def route_deadline_budget(ta: "TaskArrays", scale: float = 1.0) -> float:
+    """Serving-deadline budget (s) for a placement request: the whole queue
+    must be placed before its frames' Table-5 periods elapse, so the budget
+    is the summed per-task period over valid tasks, scaled by ``scale``
+    (``--deadline-scale``; <1 tightens, >1 relaxes)."""
+    import numpy as np
+    periods = kind_period_table()[np.asarray(ta.kind)]
+    return float(scale * periods[np.asarray(ta.valid, bool)].sum())
+
+
+def token_deadline_budget(prompt_len: int, max_new_tokens: int,
+                          scale: float = 1.0,
+                          per_token: float = 2.0) -> float:
+    """Deadline budget for a token-serving request, in engine step units:
+    ``per_token`` steps of slack per token of total length (prompt replay +
+    decode), scaled by ``scale``.  The default 2.0 admits one full wave of
+    queueing ahead of the request before its deadline is at risk."""
+    return scale * per_token * max(prompt_len + max_new_tokens, 1)
+
+
+# ---------------------------------------------------------------------------
 # struct-of-arrays form (the "precompiled" queue fed to lax.scan engines)
 # ---------------------------------------------------------------------------
 

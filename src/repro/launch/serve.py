@@ -8,6 +8,13 @@ with ``--placement`` — FlexAI multi-vehicle placement serving on the
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.serve --placement --shard \
         --routes 8 --route-km 0.03
+
+Deadline-aware QoS serving (``repro.serve.qos``): ``--qos edf`` admits
+waves earliest-effective-deadline-first with aging credit, preemption and
+shedding; ``--deadline-scale`` tightens/relaxes the Table-5 budgets:
+
+    PYTHONPATH=src python -m repro.launch.serve --placement --qos edf \
+        --routes 8 --route-km 0.01 --arrival-gap 0.02
 """
 from __future__ import annotations
 
@@ -32,7 +39,10 @@ def run_token_serving(args) -> int:
     api = model_api(cfg)
     params = unbox(api.init(jax.random.PRNGKey(0)))
     eng = ServeEngine(api, params, slots=args.slots, max_seq=args.max_seq,
-                      temperature=args.temperature)
+                      temperature=args.temperature,
+                      qos=args.qos or "fifo",
+                      deadline_scale=args.deadline_scale
+                      if args.deadline_scale is not None else 1.0)
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         plen = int(rng.integers(3, 10))
@@ -44,10 +54,58 @@ def run_token_serving(args) -> int:
     eng.run_until_done()
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in eng.finished)
+    qs = eng.qos_stats()
     print(f"served {len(eng.finished)} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+    print(f"qos[{qs['policy']}]: miss_rate {qs['miss_rate']:.3f} "
+          f"shed {qs['shed']} p50_slack {qs['p50_slack']:.1f} "
+          f"p99_slack {qs['p99_slack']:.1f} (steps)")
     for r in eng.finished[:3]:
         print(f"  req {r.uid}: {r.generated[:8]}...")
+    return 0
+
+
+def run_qos_placement_serving(args) -> int:
+    """Deadline-aware placement serving: routes arrive over a virtual
+    timeline and are admitted EDF (or bucket-FIFO) with Table-5-derived
+    deadlines, aging, preemption and shedding (see ``repro.serve.qos``)."""
+    from repro.core.environment import EnvironmentParams, build_task_queue
+    from repro.core.flexai import FlexAIAgent, FlexAIConfig
+    from repro.core.hmai import HMAIPlatform
+    from repro.serve.qos import QoSConfig, QoSPlacementEngine
+
+    if args.shard:
+        print("note: QoS placement serving is single-device for now "
+              "(--shard ignored; see ROADMAP 'Serving QoS follow-ups')")
+    plat = HMAIPlatform(capacity_scale=args.rate_scale)
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=args.seed))
+    if args.weights:
+        agent.load_weights(args.weights)
+    eng = QoSPlacementEngine(
+        plat, agent.learner.eval_p,
+        QoSConfig(policy=args.qos or "fifo",
+                  deadline_scale=args.deadline_scale
+                  if args.deadline_scale is not None else 1.0,
+                  slots=args.slots, min_bucket=args.min_bucket),
+        backlog_scale=agent.cfg.backlog_scale)
+    gap = args.arrival_gap if args.arrival_gap is not None else 0.05
+    t = 0.0
+    for i in range(args.routes):
+        queue = build_task_queue(EnvironmentParams(
+            route_km=args.route_km, rate_scale=args.rate_scale,
+            seed=args.seed + i))
+        eng.submit(queue, arrival=t)
+        t += gap
+    t0 = time.perf_counter()
+    eng.run_until_done()
+    dt = time.perf_counter() - t0
+    s = eng.stats()
+    print(f"qos[{s['policy']}] served {s['completed']}/{s['submitted']} "
+          f"routes in {dt:.2f}s wall ({s['virtual_time_s']:.3f}s virtual): "
+          f"miss_rate {s['miss_rate']:.3f} shed {s['shed']} "
+          f"preemptions {s['preemptions']} p50_slack {s['p50_slack_s']:.4f}s "
+          f"p99_slack {s['p99_slack_s']:.4f}s "
+          f"mean_stm {s['mean_stm_rate']:.3f}")
     return 0
 
 
@@ -97,6 +155,17 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # deadline-aware QoS (both serving modes); any of these explicitly set
+    # routes --placement through the QoS wave engine (None = unset)
+    ap.add_argument("--qos", choices=["fifo", "edf"], default=None,
+                    help="wave admission policy (edf = deadline-aware; "
+                         "default fifo)")
+    ap.add_argument("--deadline-scale", type=float, default=None,
+                    help="scales every derived deadline budget "
+                         "(default 1.0)")
+    ap.add_argument("--arrival-gap", type=float, default=None,
+                    help="virtual seconds between route arrivals "
+                         "(placement QoS mode; default 0.05)")
     # FlexAI placement serving
     ap.add_argument("--placement", action="store_true",
                     help="serve FlexAI route placements instead of tokens")
@@ -112,6 +181,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.placement:
+        # any QoS-shaped flag (even an explicit default value) routes to
+        # the deadline-aware wave engine; the plain batch service has no
+        # timeline for them to act on
+        if (args.qos is not None or args.arrival_gap is not None
+                or args.deadline_scale is not None):
+            return run_qos_placement_serving(args)
         return run_placement_serving(args)
     if args.arch is None:
         ap.error("--arch is required unless --placement is given")

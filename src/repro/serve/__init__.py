@@ -1,1 +1,3 @@
-from repro.serve.engine import make_serve_step, make_prefill_step, ServeEngine
+from repro.serve.engine import (FlexAIPlacementService, Request, ServeEngine,
+                                make_prefill_step, make_serve_step)
+from repro.serve.qos import QoSConfig, QoSPlacementEngine, RouteRequest

@@ -66,6 +66,19 @@ class Request:
     max_new_tokens: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # deadline-aware QoS (engine step units; see serve.qos for the
+    # placement-side analogue).  ``deadline`` is absolute; None at submit
+    # means "derive from the token budget" (tasks.token_deadline_budget).
+    deadline: "float | None" = None
+    submit_time: float = 0.0
+    finish_time: "float | None" = None
+    waves_waited: int = 0
+
+    @property
+    def slack(self) -> "float | None":
+        if self.deadline is None or self.finish_time is None:
+            return None
+        return self.deadline - self.finish_time
 
 
 class FlexAIPlacementService:
@@ -81,7 +94,8 @@ class FlexAIPlacementService:
     """
 
     def __init__(self, platform, params, *, backlog_scale: float = 1.0,
-                 min_bucket: int = 64, mesh=None):
+                 min_bucket: int = 64, mesh=None,
+                 tight_slack_s: "float | None" = None):
         from repro.core.flexai.engine import (make_schedule_fn,
                                               make_sharded_schedule_fn)
         from repro.core.platform_jax import spec_from_platform
@@ -89,6 +103,7 @@ class FlexAIPlacementService:
         self.params = params
         self.backlog_scale = backlog_scale
         self.min_bucket = min_bucket
+        self.tight_slack_s = tight_slack_s
         self.shards = 1 if mesh is None else int(mesh.size)
         if mesh is None:
             self._batched_fn = make_schedule_fn(self.spec, backlog_scale,
@@ -98,27 +113,55 @@ class FlexAIPlacementService:
             # a multiple of the mesh size and split across devices
             self._batched_fn = make_sharded_schedule_fn(
                 self.spec, mesh, backlog_scale, axis=mesh.axis_names[0])
+        # tight-deadline lane: the single-route fused scan, dispatched
+        # immediately instead of waiting to co-batch with bucket peers
+        self._fused_fn = make_schedule_fn(self.spec, backlog_scale)
         self.dispatches = 0
+        self.fused_dispatches = 0
 
     def _bucket(self, n: int) -> int:
-        b = self.min_bucket
-        while b < n:
-            b *= 2
-        return b
+        from repro.serve.qos import power_of_two_bucket
+        return power_of_two_bucket(n, self.min_bucket)
 
-    def place(self, queues: list) -> list[dict]:
+    def place(self, queues: list, deadlines: "list | None" = None,
+              now: float = 0.0) -> list[dict]:
         """Schedule every queue; returns one summary dict per queue with
-        ``placements`` trimmed to the queue's real length."""
+        ``placements`` trimmed to the queue's real length.
+
+        ``deadlines`` (absolute, same clock as ``now``) is the QoS seam:
+        when ``tight_slack_s`` is set, any request whose remaining slack
+        ``deadline - now`` is below it skips bucket co-batching and goes
+        straight through the single-route fused scan path — it pays the
+        solo dispatch instead of waiting for peers to amortize one.
+        Summaries carry ``path`` ("fused" or "batched") either way.
+        """
         from repro.core.platform_jax import summarize
         from repro.core.tasks import (TaskArrays, pad_route_batch,
                                       pad_task_arrays, stack_task_arrays,
                                       tasks_to_arrays)
         arrays = [q if isinstance(q, TaskArrays) else tasks_to_arrays(q)
                   for q in queues]
+        results: list = [None] * len(arrays)
+        tight: set = set()
+        if deadlines is not None and self.tight_slack_s is not None:
+            tight = {i for i, d in enumerate(deadlines)
+                     if d is not None and d - now < self.tight_slack_s}
+        for i in sorted(tight):
+            ta = pad_task_arrays(arrays[i], self._bucket(arrays[i].num_tasks))
+            final, recs = self._fused_fn(self.params, ta)
+            final, recs = jax.device_get((final, recs))
+            self.dispatches += 1
+            self.fused_dispatches += 1
+            summ = summarize(self.spec, final, recs)
+            summ["placements"] = recs.action[: arrays[i].num_tasks]
+            summ["bucket"] = ta.num_tasks
+            summ["path"] = "fused"
+            results[i] = summ
         by_bucket: dict = {}
         for i, ta in enumerate(arrays):
+            if i in tight:
+                continue
             by_bucket.setdefault(self._bucket(ta.num_tasks), []).append(i)
-        results: list = [None] * len(arrays)
         for bucket, idxs in sorted(by_bucket.items()):
             batch = stack_task_arrays(
                 [pad_task_arrays(arrays[i], bucket) for i in idxs])
@@ -136,6 +179,7 @@ class FlexAIPlacementService:
                 summ = summarize(self.spec, take[0], take[1])
                 summ["placements"] = take[1].action[: arrays[i].num_tasks]
                 summ["bucket"] = bucket
+                summ["path"] = "batched"
                 results[i] = summ
         return results
 
@@ -160,26 +204,56 @@ class ServeEngine:
     request queued behind a long one rides a short wave instead of paying
     the long wave's decode steps.  ``wave_log`` records the admitted uid
     groups for observability/tests.
+
+    ``qos="edf"`` makes admission deadline-aware: the head is the earliest
+    *effective* deadline (deadline minus ``aging_credit`` per passed-over
+    wave), buckets drain in effective-deadline order, and requests whose
+    decode budget can no longer fit before their deadline are shed to
+    ``dead_letter`` instead of served late.  Deadlines default to the
+    per-token budget of ``tasks.token_deadline_budget`` on the engine's
+    virtual step clock (1.0 per decode step, so QoS decisions are
+    deterministic).  ``serve.qos`` holds the placement-side analogue with
+    preemption; ``qos_stats()`` reports miss rate and slack percentiles.
     """
 
     def __init__(self, api: ModelAPI, params, *, slots: int, max_seq: int,
                  temperature: float = 0.0, seed: int = 0,
-                 pad_token: int = 0):
+                 pad_token: int = 0, qos: str = "fifo",
+                 deadline_scale: float = 1.0, aging_credit: float = 4.0,
+                 shed: bool = True):
+        if qos not in ("fifo", "edf"):
+            raise ValueError(f"unknown qos policy {qos!r}")
         self.api = api
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.temperature = temperature
         self.pad_token = pad_token
+        self.qos = qos
+        self.deadline_scale = deadline_scale
+        self.aging_credit = aging_credit
+        self.shed = shed
         self.key = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.dead_letter: list[Request] = []
         self._decode = jax.jit(api.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(api.prefill)
         self.steps_executed = 0
+        self.clock = 0.0          # virtual step clock (1.0 per decode step)
         self.wave_log: list[list[int]] = []
 
     def submit(self, req: Request) -> None:
+        from repro.core.tasks import token_deadline_budget
+        req.submit_time = self.clock
+        if req.deadline is None:
+            # price the deadline for the tokens max_seq can actually
+            # deliver, so a truncated request cannot buy easy slack from
+            # a budget it will never consume
+            cap = 1 + max(0, self.max_seq - 1 - len(req.prompt))
+            req.deadline = self.clock + token_deadline_budget(
+                len(req.prompt), min(req.max_new_tokens, cap),
+                self.deadline_scale)
         self.queue.append(req)
 
     def _merge_cache(self, prefill_cache):
@@ -208,23 +282,69 @@ class ServeEngine:
     def _length_bucket(req: Request) -> int:
         """Power-of-two bucket of the request's total token budget — the
         quantity that sets its wave's lockstep cost."""
-        total = max(len(req.prompt) + req.max_new_tokens, 1)
-        return 1 << (total - 1).bit_length()
+        from repro.serve.qos import power_of_two_bucket
+        return power_of_two_bucket(
+            max(len(req.prompt) + req.max_new_tokens, 1), 1)
+
+    def _eff_deadline(self, req: Request) -> float:
+        """EDF comparison key (shared formula: serve.qos.effective_deadline
+        — the placement engine and this token engine must never drift)."""
+        from repro.serve.qos import effective_deadline
+        return effective_deadline(req.deadline, req.waves_waited,
+                                  self.aging_credit)
+
+    def _shed_overdue(self) -> None:
+        """Timeout shedding: a queued request that cannot finish its decode
+        budget before its deadline moves to the dead-letter log."""
+        keep = []
+        for req in self.queue:
+            # finish lands at clock + max_new ticks (the prefill+first-token
+            # tick covers token 1, then max_new - 1 decode ticks) — capped
+            # by the decode steps max_seq can actually hold for this prompt
+            cap = 1 + max(0, self.max_seq - 1 - len(req.prompt))
+            need = float(max(min(req.max_new_tokens, cap), 1))
+            if self.clock + need > req.deadline:
+                req.finish_time = self.clock
+                self.dead_letter.append(req)
+            else:
+                keep.append(req)
+        self.queue = keep
 
     def _next_wave(self) -> list[Request]:
-        # greedy bin-pack: the oldest request picks the wave's length
-        # bucket, then the wave fills with that bucket's requests in FIFO
-        # order (slots not fillable from the bucket stay padded — mixing
-        # buckets would stretch every short member to the longest)
-        bucket = self._length_bucket(self.queue[0])
-        wave, rest = [], []
-        for req in self.queue:
-            if (len(wave) < self.slots
-                    and self._length_bucket(req) == bucket):
-                wave.append(req)
-            else:
-                rest.append(req)
-        self.queue = rest
+        # greedy bin-pack: the head request picks the wave's length bucket,
+        # then the wave fills from that bucket (slots not fillable from the
+        # bucket stay padded — mixing buckets would stretch every short
+        # member to the longest).  Under "fifo" the head is the oldest
+        # request and the bucket drains in submit order (the pre-QoS
+        # engine); under "edf" the head is the earliest effective deadline
+        # and the bucket drains in effective-deadline order, with every
+        # passed-over request earning one wave of aging credit.
+        if self.qos == "edf":
+            if self.shed:
+                self._shed_overdue()
+            if not self.queue:
+                return []
+            head = min(self.queue,
+                       key=lambda r: (self._eff_deadline(r), r.uid))
+            bucket = self._length_bucket(head)
+            peers = sorted(
+                (r for r in self.queue if self._length_bucket(r) == bucket),
+                key=lambda r: (self._eff_deadline(r), r.uid))
+            wave = peers[: self.slots]
+            taken = {id(r) for r in wave}
+            self.queue = [r for r in self.queue if id(r) not in taken]
+            for r in self.queue:
+                r.waves_waited += 1
+        else:
+            bucket = self._length_bucket(self.queue[0])
+            wave, rest = [], []
+            for req in self.queue:
+                if (len(wave) < self.slots
+                        and self._length_bucket(req) == bucket):
+                    wave.append(req)
+                else:
+                    rest.append(req)
+            self.queue = rest
         self.wave_log.append([r.uid for r in wave])
         while len(wave) < self.slots:  # pad the wave with dummy requests
             wave.append(Request(uid=-1, prompt=np.array([self.pad_token],
@@ -248,16 +368,21 @@ class ServeEngine:
         tok = np.asarray(sample_token(logits[:, -1, :], sub,
                                       self.temperature))[:, None]
         pos = plen
+        self.clock += 1.0  # prefill + first sampled token
         max_new = max((r.max_new_tokens for r in wave), default=0)
         for i, r in enumerate(wave):
             if not r.done and r.max_new_tokens > 0:
                 r.generated.append(int(tok[i, 0]))
+            if not r.done and len(r.generated) >= r.max_new_tokens:
+                r.done = True
+                r.finish_time = self.clock
         for _ in range(max_new - 1):
             if pos >= self.max_seq - 1:
                 break
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(tok), jnp.int32(pos))
             self.steps_executed += 1
+            self.clock += 1.0
             self.key, sub = jax.random.split(self.key)
             tok = np.asarray(sample_token(logits[:, -1, :], sub,
                                           self.temperature))[:, None]
@@ -265,10 +390,13 @@ class ServeEngine:
             for i, r in enumerate(wave):
                 if not r.done and len(r.generated) < r.max_new_tokens:
                     r.generated.append(int(tok[i, 0]))
-                if len(r.generated) >= r.max_new_tokens:
+                if not r.done and len(r.generated) >= r.max_new_tokens:
                     r.done = True
+                    r.finish_time = self.clock
         for r in wave:
             r.done = True
+            if r.finish_time is None:
+                r.finish_time = self.clock
             if r.uid >= 0:
                 self.finished.append(r)
 
@@ -276,4 +404,31 @@ class ServeEngine:
         for _ in range(max_waves):
             if not self.queue:
                 return
-            self._run_wave(self._next_wave())
+            wave = self._next_wave()
+            if not wave:      # queue fully shed at admission
+                return
+            self._run_wave(wave)
+
+    def qos_stats(self) -> dict:
+        """Deadline bookkeeping over everything served so far."""
+        shed = len(self.dead_letter)
+        missed = sum(1 for r in self.finished
+                     if r.slack is not None and r.slack < 0.0)
+        total = len(self.finished) + shed
+        slacks = [r.slack for r in self.finished if r.slack is not None]
+        return {
+            "policy": self.qos,
+            "finished": len(self.finished),
+            "shed": shed,
+            # requests cut short by max_seq got partial service; they are
+            # reported separately rather than silently counted as met
+            "truncated": sum(1 for r in self.finished
+                             if len(r.generated) < r.max_new_tokens),
+            "missed_deadline": missed,
+            "miss_rate": ((missed + shed) / total) if total else 0.0,
+            "p50_slack": float(np.percentile(slacks, 50)) if slacks else 0.0,
+            "p99_slack": float(np.percentile(slacks, 99)) if slacks else 0.0,
+            "mean_turnaround": float(np.mean(
+                [r.finish_time - r.submit_time for r in self.finished]))
+            if self.finished else 0.0,
+        }

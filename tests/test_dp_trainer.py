@@ -137,6 +137,7 @@ def test_dp_one_shard_matches_unsharded_fused_trainer():
                                    atol=1e-4)
 
 
+@pytest.mark.slow
 def test_dp_sharded_matches_unsharded_equal_global_batch():
     """2-device shard_map DP == unsharded DP on the same 4-route global
     batch: identical action trajectory, params to accumulated-fp32

@@ -105,6 +105,94 @@ def test_heuristic_scan_parity(name):
     assert scan["r_balance"] == pytest.approx(loop["r_balance"], abs=2e-3)
 
 
+def test_state_to_platform_restores_oracle():
+    """state_from_platform -> state_to_platform round-trips every §7.2
+    field, and a restored oracle continues a route exactly like the
+    uninterrupted one (the NumPy half of the serving preemption seam)."""
+    from repro.core.platform_jax import state_from_platform, state_to_platform
+    q = _queue(3, km=0.02)
+    cut = len(q) // 2
+    agent = FlexAIAgent(_platform(), FlexAIConfig(seed=4))
+    p_full = _platform()
+    agent.schedule(p_full, q)
+    p_head = _platform()
+    agent.schedule(p_head, q[:cut])
+    p_resume = _platform()
+    state_to_platform(state_from_platform(p_head), p_resume)
+    np.testing.assert_allclose(p_resume.avail, p_head.avail, rtol=1e-6)
+    np.testing.assert_allclose(p_resume.MS, p_head.MS, rtol=1e-6)
+    np.testing.assert_array_equal(p_resume.num_tasks, p_head.num_tasks)
+    agent.schedule(p_resume, q[cut:])
+    np.testing.assert_allclose(p_resume.avail, p_full.avail, rtol=1e-5)
+    np.testing.assert_allclose(p_resume.E, p_full.E, rtol=1e-5)
+    np.testing.assert_allclose(p_resume.T, p_full.T, rtol=1e-5)
+    np.testing.assert_array_equal(p_resume.num_tasks, p_full.num_tasks)
+
+
+# ---------------------------------------------------------------------------
+# scheduler edge cases: empty windows, single task, all-equal ties
+# (the happy-path parity above never hits these branches)
+# ---------------------------------------------------------------------------
+
+def _synthetic_tasks(n, kind=TaskKind.YOLO, arrival=0.0, safety=0.05):
+    return [Task(uid=i, kind=kind, camera_group="FC", camera_id=0,
+                 arrival_time=arrival, safety_time=safety)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("name", ["worst", "ata", "minmin"])
+def test_scan_single_task_parity(name):
+    """A one-task route exercises the degenerate window (29 padding rows
+    in Min-Min's first window; a length-1 scan elsewhere)."""
+    q = _synthetic_tasks(1)
+    loop = get_scheduler(name).schedule(_platform(), q)
+    scan = scan_schedule(name, _platform(), q)
+    assert scan["tasks"] == loop["tasks"] == 1
+    assert scan["makespan_s"] == pytest.approx(loop["makespan_s"], rel=1e-5)
+    assert scan["total_energy_j"] == pytest.approx(loop["total_energy_j"],
+                                                   rel=1e-5)
+    assert scan["stm_rate"] == loop["stm_rate"]
+
+
+@pytest.mark.parametrize("name", ["worst", "ata", "minmin"])
+def test_scan_empty_window_is_noop(name):
+    """Padding a route to spill whole extra windows (Min-Min) / extra scan
+    steps (ATA, worst) must not change any metric: all-invalid steps pass
+    the platform state through."""
+    from repro.core.schedulers.scan import get_scan_scheduler
+    q = _queue(13, km=0.02)
+    plat = _platform()
+    spec = spec_from_platform(plat)
+    fn = get_scan_scheduler(name)
+    ta = tasks_to_arrays(q)
+    # 2 fully-invalid Min-Min windows (window=30) beyond the real tasks
+    padded = pad_task_arrays(ta, ta.num_tasks + 60)
+    final_a, recs_a = fn(spec, ta)
+    final_b, recs_b = fn(spec, padded)
+    for a, b in zip(final_a, final_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    assert not np.asarray(recs_b.valid)[ta.num_tasks:].any()
+    s_a, s_b = (summarize(spec, f, r)
+                for f, r in ((final_a, recs_a), (final_b, recs_b)))
+    assert s_a["tasks"] == s_b["tasks"] == len(q)
+    assert s_a["stm_rate"] == pytest.approx(s_b["stm_rate"], abs=1e-9)
+
+
+@pytest.mark.parametrize("name", ["ata", "minmin"])
+def test_scan_all_equal_completion_time_tiebreak(name):
+    """Identical tasks tie on completion time across every window row; the
+    scan path's flat argmin must break ties exactly like the loop's
+    strict-< first-hit (row-major), or placements drift."""
+    q = _synthetic_tasks(45)  # 1.5 Min-Min windows of identical tasks
+    p_loop = _platform()
+    loop = get_scheduler(name).schedule(p_loop, q)
+    loop_actions = np.asarray([r.accel_index for r in p_loop.records])
+    scan = scan_schedule(name, _platform(), q)
+    np.testing.assert_array_equal(scan["placements"], loop_actions)
+    assert scan["makespan_s"] == pytest.approx(loop["makespan_s"], rel=1e-5)
+    assert scan["r_balance"] == pytest.approx(loop["r_balance"], abs=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # vmapped multi-route batching
 # ---------------------------------------------------------------------------
@@ -243,6 +331,30 @@ def test_placement_service_buckets_and_trims():
         assert r["bucket"] >= len(q)
     # same-bucket queues share a dispatch
     assert svc.dispatches == len({r["bucket"] for r in results})
+
+
+def test_placement_service_routes_tight_deadlines_to_fused_path():
+    """With a deadline vector, requests whose slack is under
+    ``tight_slack_s`` dispatch solo through the fused scan path and the
+    rest co-batch — with identical placements either way."""
+    from repro.serve.engine import FlexAIPlacementService
+    plat = _platform()
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=6))
+    queues = [_queue(41, km=0.02), _queue(42, km=0.02), _queue(43, km=0.02)]
+    base = FlexAIPlacementService(plat, agent.learner.eval_p, min_bucket=64)
+    ref = base.place(queues)
+    svc = FlexAIPlacementService(plat, agent.learner.eval_p, min_bucket=64,
+                                 tight_slack_s=0.05)
+    results = svc.place(queues, deadlines=[0.01, 10.0, 10.0], now=0.0)
+    assert results[0]["path"] == "fused"
+    assert results[1]["path"] == results[2]["path"] == "batched"
+    assert svc.fused_dispatches == 1
+    for r, rr in zip(ref, results):
+        np.testing.assert_array_equal(r["placements"], rr["placements"])
+        assert r["stm_rate"] == pytest.approx(rr["stm_rate"], abs=1e-9)
+    # no deadline vector -> unchanged batched behaviour
+    plain = svc.place(queues)
+    assert all(r["path"] == "batched" for r in plain)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,9 @@
-"""Serving engine: wave batching, greedy determinism, sampling."""
+"""Serving engine: wave batching, greedy determinism, sampling, and the
+deadline-aware (EDF + aging + shedding) admission mode."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.api import model_api
 from repro.models.config import ModelConfig
@@ -66,6 +68,105 @@ def test_fifo_within_bucket_and_oldest_first():
                            max_new_tokens=4))
     eng.run_until_done()
     assert eng.wave_log == [[0, 1], [2, 3], [4]]
+
+
+def test_edf_admission_reorders_by_deadline():
+    """qos="edf": the tightest effective deadline picks the wave bucket,
+    so a late-submitted tight pair overtakes an early loose long pair."""
+    eng = _engine(slots=2)
+    eng.qos = "edf"
+    loose_a = Request(uid=0, prompt=np.arange(1, 13, dtype=np.int32),
+                      max_new_tokens=12, deadline=1000.0)
+    loose_b = Request(uid=1, prompt=np.arange(1, 13, dtype=np.int32),
+                      max_new_tokens=12, deadline=900.0)
+    tight_c = Request(uid=2, prompt=np.array([1, 2], np.int32),
+                      max_new_tokens=2, deadline=50.0)
+    tight_d = Request(uid=3, prompt=np.array([3, 4], np.int32),
+                      max_new_tokens=2, deadline=40.0)
+    for r in (loose_a, loose_b, tight_c, tight_d):
+        eng.submit(r)
+    eng.run_until_done()
+    # tight bucket first, EDF order inside each bucket
+    assert eng.wave_log == [[3, 2], [1, 0]]
+    assert len(eng.finished) == 4
+    assert all(r.slack is not None and r.slack >= 0 for r in eng.finished)
+
+
+def test_edf_aging_credit_prevents_cross_bucket_starvation():
+    """A long-bucket request facing an endless stream of tight newcomers
+    must still be admitted once its aging credit outweighs the deadline
+    gap (co-submitted peers age together; the credit is earned against
+    requests that arrive later)."""
+    eng = _engine(slots=1, max_seq=64)
+    eng.qos = "edf"
+    eng.aging_credit = 8.0
+    eng.shed = False
+    long_r = Request(uid=0, prompt=np.arange(1, 13, dtype=np.int32),
+                     max_new_tokens=12, deadline=200.0)
+    eng.submit(long_r)
+    waves = 0
+    uid = 1
+    while not long_r.done and waves < 40:
+        # keep one tight short request arriving per wave, always with a
+        # nearer absolute deadline than the long request's
+        eng.submit(Request(uid=uid, prompt=np.array([1, 2], np.int32),
+                           max_new_tokens=2, deadline=eng.clock + 50.0))
+        uid += 1
+        eng._run_wave(eng._next_wave())
+        waves += 1
+    assert long_r.done, "long request starved despite aging credit"
+    # bound: (deadline spread)/credit waves of aging + one wave of grace
+    spread = 200.0 - 50.0
+    assert long_r.waves_waited <= spread / 8.0 + 2
+
+
+def test_edf_timeout_shed_to_dead_letter():
+    """A request whose decode budget cannot fit before its deadline is
+    shed at admission, not served late."""
+    eng = _engine(slots=2)
+    eng.qos = "edf"
+    doomed = Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                     max_new_tokens=8, deadline=2.0)  # needs 8 steps
+    fine = Request(uid=1, prompt=np.array([1, 2, 3], np.int32),
+                   max_new_tokens=4, deadline=500.0)
+    # exact fit: finish lands at clock + max_new (prefill+first token is
+    # one tick) — must be served with zero slack, not shed
+    exact = Request(uid=2, prompt=np.array([1, 2, 3], np.int32),
+                    max_new_tokens=4, deadline=4.0)
+    for r in (doomed, fine, exact):
+        eng.submit(r)
+    eng.run_until_done()
+    assert [r.uid for r in eng.dead_letter] == [0]
+    assert sorted(r.uid for r in eng.finished) == [1, 2]
+    assert exact.slack == pytest.approx(0.0)
+    stats = eng.qos_stats()
+    assert stats["shed"] == 1
+    assert stats["miss_rate"] == pytest.approx(1 / 3)
+
+
+def test_default_deadline_derived_from_token_budget():
+    """submit() stamps a Table-5-style per-token budget when no explicit
+    deadline is given (tasks.token_deadline_budget)."""
+    from repro.core.tasks import token_deadline_budget
+    eng = _engine()
+    r = Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                max_new_tokens=5)
+    eng.submit(r)
+    assert r.deadline == pytest.approx(token_deadline_budget(3, 5))
+    assert r.deadline > 1 + r.max_new_tokens  # feasible by construction
+
+
+def test_fifo_mode_never_sheds_and_logs_no_deadline_pressure():
+    """Default engine (qos="fifo") behaves exactly as before: no dead
+    letters, finish ordering by bucket-FIFO."""
+    eng = _engine(slots=2)
+    tight = Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                    max_new_tokens=4, deadline=0.5)  # impossibly tight
+    eng.submit(tight)
+    eng.run_until_done()
+    assert not eng.dead_letter
+    assert len(eng.finished) == 1
+    assert eng.qos_stats()["miss_rate"] == 1.0  # late, but served
 
 
 def test_greedy_decode_deterministic():

@@ -1,0 +1,338 @@
+"""Property-based serving contract for the deadline-aware QoS layer
+(``repro.serve.qos``):
+
+* **conservation** — every submitted request ends in exactly one of
+  completed / shed, and nothing is left queued after ``run_until_done``;
+* **no-starvation** — under EDF-with-aging, every admitted request waits
+  at most ``ceil(spread/credit) + n_requests`` admission rounds;
+* **EDF dominance** — on equal-service workloads (one bucket, common
+  arrival), EDF admission's deadline-miss rate is <= bucket-FIFO's;
+* **preemption round-trip** — a preempted wave's checkpoint/resume through
+  the ``PlatformState`` seam reproduces the uninterrupted scan bit-exactly.
+
+Each property is a plain check function; with ``hypothesis`` installed
+(requirements-dev.txt) the checks run under randomized search with an
+example budget bounded by ``SERVE_QOS_EXAMPLES`` (CI sets a small budget).
+Without it — the air-gapped case — the same checks run over a fixed-seed
+parameter sweep, so the serving contract is enforced either way instead
+of skipping away.
+
+Queueing-discipline properties run on the ``stub`` executor (state
+pass-through, no device work) so example counts stay affordable; the
+round-trip property uses the real scan executor.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.hmai import HMAIPlatform
+from repro.core.flexai import FlexAIAgent, FlexAIConfig
+from repro.core.tasks import TaskArrays
+from repro.serve.qos import COMPLETED, QoSConfig, QoSPlacementEngine, SHED
+
+MAX_EXAMPLES = int(os.environ.get("SERVE_QOS_EXAMPLES", "30"))
+
+RS = 0.05
+_PLATFORM = HMAIPlatform(capacity_scale=RS)
+_AGENT = FlexAIAgent(_PLATFORM, FlexAIConfig(seed=3))
+
+
+def _route(n: int, seed: int = 0) -> TaskArrays:
+    """Synthetic [n] route (no environment build cost)."""
+    rng = np.random.default_rng(seed)
+    return TaskArrays(
+        kind=rng.integers(0, 3, n).astype(np.int32),
+        arrival=np.sort(rng.uniform(0, 0.01 * n, n)).astype(np.float32),
+        safety=np.full(n, 0.05, np.float32),
+        group=np.zeros(n, np.int32),
+        valid=np.ones(n, bool))
+
+
+def _engine(cfg: QoSConfig, executor="stub") -> QoSPlacementEngine:
+    return QoSPlacementEngine(_PLATFORM, _AGENT.learner.eval_p, cfg,
+                              backlog_scale=_AGENT.cfg.backlog_scale,
+                              executor=executor)
+
+
+def _miss_count(eng: QoSPlacementEngine) -> int:
+    return (len(eng.dead_letter)
+            + sum(1 for r in eng.completed if r.slack < 0.0))
+
+
+# ---------------------------------------------------------------------------
+# property checks (shared by the hypothesis and fixed-seed drivers)
+# ---------------------------------------------------------------------------
+
+def check_conservation(policy, slots, preempt, shed, jobs, seed):
+    """Every submitted uid ends exactly once in completed|shed; the queues
+    fully drain."""
+    eng = _engine(QoSConfig(policy=policy, slots=slots, preempt=preempt,
+                            shed=shed, chunk=16, min_bucket=16))
+    for i, (n, arr, budget) in enumerate(jobs):
+        eng.submit(_route(n, seed + i), arrival=arr, deadline=arr + budget)
+    eng.run_until_done()
+    assert not eng.backlog and not eng.pending and not eng.preempted
+    done = [r.uid for r in eng.completed]
+    shed_uids = [d["uid"] for d in eng.dead_letter]
+    assert sorted(done + shed_uids) == list(range(len(jobs)))
+    assert all(r.status == COMPLETED for r in eng.completed)
+    s = eng.stats()
+    assert s["submitted"] == len(jobs)
+    assert s["completed"] + s["shed"] == len(jobs)
+
+
+def _serve_stream(credit, long_deadline, tight_deadline, n_stream, seed):
+    """One loose long-bucket request against a continuing stream of tight
+    short-bucket newcomers, one fresh arrival per service round (the
+    cross-bucket starvation scenario aging exists for)."""
+    eng = _engine(QoSConfig(policy="edf", aging_credit=credit, slots=1,
+                            preempt=False, shed=False,
+                            chunk=16, min_bucket=16))
+    long_r = eng.submit(_route(60, seed), arrival=0.0,
+                        deadline=long_deadline)
+    gap = 0.9 * 16 * eng.svc  # slightly faster than short-wave service:
+    for i in range(n_stream):  # the tight backlog never runs dry
+        eng.submit(_route(12, seed + 1 + i), arrival=i * gap,
+                   deadline=tight_deadline)
+    eng.run_until_done()
+    return long_r
+
+
+def check_no_starvation(long_budget, credit, seed):
+    """Aging credit bounds cross-bucket admission delay: against an
+    endless tighter-deadline stream, a request waits at most
+    ``ceil(spread/credit) + O(1)`` waves — and the same stream *does*
+    starve it for the whole stream length when the credit is zero, so the
+    bound is earned by aging, not by the workload."""
+    tight = 0.01
+    spread = long_budget - tight
+    k = math.ceil(spread / credit) + 3
+    n_stream = k + 10  # stream strictly outlasts the bound
+    long_r = _serve_stream(credit, long_budget, tight, n_stream, seed)
+    assert long_r.status == COMPLETED
+    assert long_r.waves_waited <= k, (long_r.waves_waited, k)
+    starved = _serve_stream(0.0, long_budget, tight, n_stream, seed)
+    assert starved.waves_waited >= n_stream - 3
+
+
+def check_edf_dominates(n_jobs, slots, budgets, seed):
+    """On equal-service workloads (one bucket, common arrival) EDF
+    admission never misses more deadlines than bucket-FIFO.  Equal service
+    keeps the classic exchange argument airtight: any FIFO schedule can be
+    reordered toward EDF one swap at a time without adding a miss."""
+    def serve(policy):
+        eng = _engine(QoSConfig(policy=policy, slots=slots, preempt=False,
+                                shed=(policy == "edf"),
+                                chunk=16, min_bucket=16))
+        for i in range(n_jobs):
+            # fixed length -> one bucket -> identical wave service time
+            eng.submit(_route(16, seed + i), arrival=0.0,
+                       deadline=budgets[i % len(budgets)])
+        eng.run_until_done()
+        return eng
+    assert _miss_count(serve("edf")) <= _miss_count(serve("fifo"))
+
+
+def check_preemption_roundtrip(n_long, n_short, arrive_frac, seed):
+    """A preempted wave resumes from its PlatformState checkpoint with the
+    exact placements/metrics of an uninterrupted scan."""
+    from repro.core.flexai.engine import make_schedule_fn
+    from repro.core.tasks import pad_task_arrays
+
+    long_route = _route(n_long, seed)
+    short_route = _route(n_short, seed + 1)
+    cfg = QoSConfig(policy="edf", slots=2, chunk=8, min_bucket=16,
+                    laxity_s=1e-4, aging_credit=0.0)
+    eng = _engine(cfg, executor=None)  # real scan executor
+    service_long = eng._bucket(n_long) * eng.svc
+    r_long = eng.submit(long_route, arrival=0.0,
+                        deadline=10.0 + service_long)
+    # short arrives mid-wave with a deadline tight enough to preempt but
+    # feasible enough not to be shed
+    arrive = arrive_frac * service_long
+    r_short = eng.submit(short_route, arrival=arrive,
+                         deadline=arrive + eng._bucket(n_short) * eng.svc
+                         + 3 * cfg.chunk * eng.svc)
+    eng.run_until_done()
+    assert r_long.status == COMPLETED and r_short.status == COMPLETED
+
+    ref_fn = make_schedule_fn(eng.spec, _AGENT.cfg.backlog_scale)
+    final, recs = ref_fn(_AGENT.learner.eval_p,
+                         pad_task_arrays(long_route, r_long.bucket))
+    ref_actions = np.asarray(recs.action)[: n_long]
+    np.testing.assert_array_equal(r_long.summary["placements"], ref_actions)
+    # the checkpointed lane's final metrics must match bit-for-bit
+    assert r_long.summary["stm_rate"] == pytest.approx(
+        float(np.asarray(recs.met)[: n_long].mean()), abs=0)
+    return eng.preemption_count
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = settings(max_examples=MAX_EXAMPLES, deadline=None)
+    _JOBS = st.lists(
+        st.tuples(st.integers(1, 40),          # n_tasks
+                  st.floats(0.0, 0.5),         # arrival
+                  st.floats(0.005, 0.6)),      # deadline budget
+        min_size=1, max_size=12)
+
+    @SETTINGS
+    @given(policy=st.sampled_from(["edf", "fifo"]), slots=st.integers(1, 3),
+           preempt=st.booleans(), shed=st.booleans(), jobs=_JOBS,
+           seed=st.integers(0, 999))
+    def test_conservation(policy, slots, preempt, shed, jobs, seed):
+        check_conservation(policy, slots, preempt, shed, jobs, seed)
+
+    @settings(max_examples=min(15, MAX_EXAMPLES), deadline=None)
+    @given(long_budget=st.floats(0.05, 0.5), credit=st.floats(0.01, 0.05),
+           seed=st.integers(0, 999))
+    def test_no_starvation_bound(long_budget, credit, seed):
+        check_no_starvation(long_budget, credit, seed)
+
+    @SETTINGS
+    @given(n_jobs=st.integers(2, 12), slots=st.integers(1, 2),
+           budgets=st.lists(st.floats(0.005, 0.25), min_size=12,
+                            max_size=12),
+           seed=st.integers(0, 999))
+    def test_edf_dominates_fifo(n_jobs, slots, budgets, seed):
+        check_edf_dominates(n_jobs, slots, budgets, seed)
+
+    @settings(max_examples=min(8, MAX_EXAMPLES), deadline=None)
+    @given(n_long=st.integers(33, 64), n_short=st.integers(4, 16),
+           arrive_frac=st.floats(0.1, 0.6), seed=st.integers(0, 99))
+    def test_preemption_roundtrip_bit_exact(n_long, n_short, arrive_frac,
+                                            seed):
+        check_preemption_roundtrip(n_long, n_short, arrive_frac, seed)
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed fallback drivers (air-gapped: no hypothesis available)
+# ---------------------------------------------------------------------------
+
+_FALLBACK_SEEDS = list(range(min(MAX_EXAMPLES, 20)))
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+def test_conservation_seeded(seed):
+    rng = np.random.default_rng(seed)
+    jobs = [(int(rng.integers(1, 41)), float(rng.uniform(0, 0.5)),
+             float(rng.uniform(0.005, 0.6)))
+            for _ in range(int(rng.integers(1, 13)))]
+    check_conservation(policy=("edf", "fifo")[seed % 2],
+                       slots=int(rng.integers(1, 4)),
+                       preempt=bool(seed % 3), shed=bool((seed // 2) % 2),
+                       jobs=jobs, seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS[:10])
+def test_no_starvation_bound_seeded(seed):
+    rng = np.random.default_rng(1000 + seed)
+    check_no_starvation(long_budget=float(rng.uniform(0.05, 0.5)),
+                        credit=float(rng.uniform(0.01, 0.05)), seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+def test_edf_dominates_fifo_seeded(seed):
+    rng = np.random.default_rng(2000 + seed)
+    check_edf_dominates(n_jobs=int(rng.integers(2, 13)),
+                        slots=int(rng.integers(1, 3)),
+                        budgets=[float(rng.uniform(0.005, 0.25))
+                                 for _ in range(12)],
+                        seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS[:6])
+def test_preemption_roundtrip_bit_exact_seeded(seed):
+    rng = np.random.default_rng(3000 + seed)
+    check_preemption_roundtrip(n_long=int(rng.integers(33, 65)),
+                               n_short=int(rng.integers(4, 17)),
+                               arrive_frac=float(rng.uniform(0.1, 0.6)),
+                               seed=seed)
+
+
+def test_preemption_actually_fires():
+    """Guard against the round-trip property passing vacuously: this
+    construction must preempt at least once."""
+    preempts = check_preemption_roundtrip(n_long=64, n_short=8,
+                                          arrive_frac=0.3, seed=0)
+    assert preempts >= 1
+
+
+# ---------------------------------------------------------------------------
+# deterministic spot-checks
+# ---------------------------------------------------------------------------
+
+def test_wave_inherits_aging_credit(fixed_seed):
+    """A passed-over request keeps its earned aging credit when finally
+    packed: the wave's counter starts at the member's, so a preemption
+    right after admission cannot reset the anti-starvation clock."""
+    eng = _engine(QoSConfig(policy="edf", slots=1, chunk=16, min_bucket=16,
+                            preempt=False, shed=False))
+    eng.submit(_route(10, fixed_seed), arrival=0.0, deadline=1.0)
+    eng.submit(_route(10, fixed_seed + 1), arrival=0.0, deadline=2.0)
+    loose = eng.submit(_route(10, fixed_seed + 2), arrival=0.0,
+                       deadline=5.0)
+    eng._run_wave(eng._next_wave())
+    eng._run_wave(eng._next_wave())
+    wave = eng._next_wave()
+    assert [r.uid for r in wave.requests] == [loose.uid]
+    assert wave.waves_waited == loose.waves_waited == 2
+
+
+def test_shed_goes_to_dead_letter(fixed_seed):
+    """A request whose budget can't cover even solo service is shed with a
+    reason, never served."""
+    eng = _engine(QoSConfig(policy="edf", chunk=16, min_bucket=16))
+    doomed = eng.submit(_route(16, fixed_seed), arrival=0.0,
+                        deadline=0.25 * 16 * eng.svc)
+    ok = eng.submit(_route(16, fixed_seed + 1), arrival=0.0, deadline=10.0)
+    eng.run_until_done()
+    assert doomed.status == SHED
+    assert ok.status == COMPLETED
+    assert [d["uid"] for d in eng.dead_letter] == [doomed.uid]
+    assert eng.dead_letter[0]["reason"] == "infeasible"
+
+
+def test_fifo_policy_matches_pre_qos_admission(fixed_seed):
+    """policy="fifo" reproduces oldest-head bucket admission: submit order
+    within a bucket, head picks the bucket."""
+    eng = _engine(QoSConfig(policy="fifo", slots=2, chunk=16,
+                            min_bucket=16))
+    eng.submit(_route(60, fixed_seed), arrival=0.0, deadline=100.0)   # b=64
+    eng.submit(_route(10, fixed_seed + 1), arrival=0.0, deadline=1.0)  # b=16
+    eng.submit(_route(12, fixed_seed + 2), arrival=0.0, deadline=2.0)  # b=16
+    eng.submit(_route(50, fixed_seed + 3), arrival=0.0, deadline=0.5)  # b=64
+    eng.run_until_done()
+    assert eng.wave_log == [[0, 3], [1, 2]]
+
+
+def test_edf_reorders_by_deadline(fixed_seed):
+    """Same workload under EDF: the tight bucket-64 head drags its bucket
+    first (deadline order within the wave), then the bucket-16 pair."""
+    eng = _engine(QoSConfig(policy="edf", slots=2, chunk=16, min_bucket=16,
+                            preempt=False, shed=False))
+    eng.submit(_route(60, fixed_seed), arrival=0.0, deadline=100.0)
+    eng.submit(_route(10, fixed_seed + 1), arrival=0.0, deadline=1.0)
+    eng.submit(_route(12, fixed_seed + 2), arrival=0.0, deadline=2.0)
+    eng.submit(_route(50, fixed_seed + 3), arrival=0.0, deadline=0.5)
+    eng.run_until_done()
+    assert eng.wave_log == [[3, 0], [1, 2]]

@@ -9,6 +9,7 @@ import sys
 import textwrap
 
 import numpy as np
+import pytest
 
 from repro.core.tasks import (invalid_task_arrays, pad_route_batch,
                               stack_task_arrays, tasks_to_arrays)
@@ -50,6 +51,7 @@ _PRELUDE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharded_schedule_matches_vmapped():
     """4-device shard_map schedule == plain vmapped scan: identical
     placements, final platform states to fp32 tolerance.  6 routes on 4
@@ -78,6 +80,7 @@ def test_sharded_schedule_matches_vmapped():
     assert "OK 8" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_runs_and_lanes_differ():
     """ScanFlexAI over a 2-device mesh: one fused episode per lane, lanes
     keep independent seeds/weights, counters advance like the local path."""
@@ -104,6 +107,7 @@ def test_sharded_train_runs_and_lanes_differ():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_placement_service_sharded_matches_unsharded():
     """FlexAIPlacementService on a 4-device mesh returns the same
     placements and summaries as the single-device service."""
