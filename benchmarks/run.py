@@ -27,6 +27,7 @@ MODULES = [
     "training_throughput",
     "kernel_micro",
     "roofline",
+    "recovery",
 ]
 
 

@@ -24,6 +24,12 @@
 #    fixed-seed sweep otherwise, bounded example budget) plus the
 #    BENCH_serving.json contract — EDF-with-aging must never miss more
 #    deadlines than bucket-FIFO and must be strictly better overloaded.
+# 8. Durability gate: the full durability suite incl. the slow
+#    subprocess tests (SIGKILL mid-wave -> restore -> bit-exact digest;
+#    elastic resume onto a 2-device mesh), then the recovery benchmark
+#    smoke gating on BENCH_recovery.json — crash-recovery parity exact,
+#    snapshot sync overhead < 10%, and graceful degradation strictly
+#    better than the same fault unhandled.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -33,9 +39,10 @@ python -m pip install -q -r requirements-dev.txt \
     || echo "pip install failed; property tests fall back to seeded sweeps"
 
 echo "== tier-1 suite (full run incl. slow subprocess tests, gating) =="
-# the serving property suite is excluded here: it runs once, with its own
-# bounded example budget, in the dedicated gate below
-python -m pytest -q --runslow --ignore=tests/test_serve_properties.py
+# the serving property and durability suites are excluded here: each
+# runs once in its own dedicated gate below
+python -m pytest -q --runslow --ignore=tests/test_serve_properties.py \
+    --ignore=tests/test_durability.py
 tier1=$?
 
 echo "== serving property contract (bounded example budget) =="
@@ -56,6 +63,27 @@ print(f"edf_never_worse={r['edf_never_worse']} "
 sys.exit(0 if ok else 1)
 EOF
 serve_bench=$?
+
+echo "== durability suite (incl. SIGKILL recovery + elastic resume) =="
+python -m pytest -q --runslow tests/test_durability.py
+durability=$?
+
+echo "== recovery benchmark smoke (overhead / crash parity / degradation) =="
+python -m benchmarks.run --only recovery \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_recovery.json"))
+g = r["gate"]
+ok = (g["parity_exact"] and g["overhead_below_0.10"]
+      and g["degradation_strictly_better"])
+print(f"parity_exact={g['parity_exact']} "
+      f"snapshot_overhead={r['overhead']['overhead_frac']:.3f} "
+      f"mttr_waves={r['recovery']['mttr_redundant_waves']} "
+      f"miss handled={r['degradation']['handled']['miss_rate']:.3f} vs "
+      f"unhandled={r['degradation']['unhandled']['miss_rate']:.3f}")
+sys.exit(0 if ok else 1)
+EOF
+recovery=$?
 
 echo "== scan-engine parity gate (2 host devices) =="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
@@ -107,8 +135,9 @@ sys.exit(0 if ok else 1)
 EOF
 train_bench=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} =="
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} =="
 [ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
     && [ "${dp}" -eq 0 ] && [ "${bench}" -eq 0 ] \
     && [ "${train_bench}" -eq 0 ] && [ "${serve_prop}" -eq 0 ] \
-    && [ "${serve_bench}" -eq 0 ]
+    && [ "${serve_bench}" -eq 0 ] && [ "${durability}" -eq 0 ] \
+    && [ "${recovery}" -eq 0 ]

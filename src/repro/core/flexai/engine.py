@@ -67,6 +67,34 @@ def _schedule_run(spec: PlatformSpec, backlog_scale: float):
     return run
 
 
+def _schedule_run_masked(spec: PlatformSpec, backlog_scale: float):
+    """Greedy episode with an ``alive`` accelerator mask: dead cores are
+    excluded from the Q argmax, so every placement lands on a survivor.
+
+    This is the graceful-degradation variant of :func:`_schedule_run`
+    (serve/durability.py): ``alive`` is a runtime [n] bool argument, so
+    one compiled closure serves any fault pattern, and with all cores
+    alive the select is the identity — placements match the unmasked
+    engine bit-exactly.
+    """
+    feat = jnp.asarray(kind_feature_table())
+
+    def body(params, alive, state, task):
+        sv = state_vector(spec, feat, backlog_scale, state, task)
+        q = jnp.where(alive, qnet_apply(params, sv), -jnp.inf)
+        action = jnp.argmax(q).astype(jnp.int32)
+        return platform_step(spec, state, task, action)
+
+    def run(params, tasks: TaskArrays, state0=None, alive=None):
+        init = platform_init(spec.n) if state0 is None else state0
+        mask = jnp.ones((spec.n,), bool) if alive is None else alive
+        final, recs = jax.lax.scan(
+            functools.partial(body, params, mask), init, tasks)
+        return final, recs
+
+    return run
+
+
 def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
                      batched: bool = False):
     """Compile the greedy scheduler.
@@ -513,6 +541,10 @@ class ScanFlexAI:
         self._eval_fn = None
         self.losses: list[float] = []
         self.best_eval_stm: float | None = None
+        # model-selection state lives on the instance (not train() locals)
+        # so a snapshot/resume cycle keeps the best-so-far candidate
+        self._best_stm: float = -1.0
+        self._best_params: DQNParams | None = None
 
     def _as_arrays(self, tasks) -> TaskArrays:
         return tasks if isinstance(tasks, TaskArrays) else \
@@ -561,7 +593,8 @@ class ScanFlexAI:
         return s
 
     def train(self, queues: list, episodes: int, eval_queue=None,
-              eval_every: int = 5) -> list:
+              eval_every: int = 5, on_episode=None,
+              start_episode: int = 0) -> list:
         """Cycle the queue pool; with ``lanes > 1`` each episode consumes
         the next ``lanes`` routes round-robin, one per lane.
 
@@ -570,6 +603,14 @@ class ScanFlexAI:
         best-eval EvalNet weights (the scan-path counterpart of
         ``FlexAIAgent.train``'s model selection); the winner is restored
         into EvalNet/TargNet once training ends.
+
+        ``on_episode(ep, trainer)`` fires after each episode (snapshot
+        cadence hook); ``start_episode`` resumes mid-run — route cycling
+        and the eval cadence are indexed by the *global* episode number,
+        so a restored run consumes exactly the episodes the uninterrupted
+        run would have (the bit-exact resume contract; model-selection
+        state rides on ``self._best_stm`` / ``self._best_params`` and is
+        the restorer's to reinstall).
         """
         routes = [self._as_arrays(q) for q in queues]
         if self.lanes > 1 or self.dp:
@@ -584,9 +625,10 @@ class ScanFlexAI:
         ta_eval = self._as_arrays(eval_queue) \
             if eval_queue is not None else None
         history = []
-        best_stm, best_params = -1.0, None
+        if start_episode == 0:
+            self._best_stm, self._best_params = -1.0, None
         per_lane = 1 if (self.lanes == 1 and not self.dp) else self.lanes
-        for ep in range(episodes):
+        for ep in range(start_episode, episodes):
             if per_lane == 1:
                 history.append(self.train_episode(routes[ep % len(routes)]))
             else:
@@ -599,12 +641,14 @@ class ScanFlexAI:
                 history[-1]["eval_stm"] = (
                     stms[0] if len(stms) == 1 else stms)
                 lane = int(np.argmax(stms))
-                if stms[lane] > best_stm:
-                    best_stm = stms[lane]
-                    best_params = self.eval_params(lane)
-        if best_params is not None:
-            self.set_params(best_params)
-            self.best_eval_stm = best_stm
+                if stms[lane] > self._best_stm:
+                    self._best_stm = stms[lane]
+                    self._best_params = self.eval_params(lane)
+            if on_episode is not None:
+                on_episode(ep, self)
+        if self._best_params is not None:
+            self.set_params(self._best_params)
+            self.best_eval_stm = self._best_stm
         return history
 
     def _eval_stms(self, ta_eval: TaskArrays) -> list[float]:

@@ -21,28 +21,37 @@ from repro.core.tasks import (TaskArrays, tasks_to_arrays,
                               window_task_arrays)
 
 
-def worst_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None):
-    """Everything onto accelerator 0 (the unscheduled worst case)."""
+def worst_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
+               alive=None):
+    """Everything onto one accelerator (the unscheduled worst case):
+    accelerator 0, or the first alive one under a fault mask."""
+    target = (jnp.int32(0) if alive is None
+              else jnp.argmax(alive).astype(jnp.int32))
 
     def body(state, task):
-        return platform_step(spec, state, task, jnp.int32(0))
+        return platform_step(spec, state, task, target)
 
     init = platform_init(spec.n) if state0 is None else state0
     return jax.lax.scan(body, init, tasks)
 
 
-def ata_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None):
+def ata_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
+             alive=None):
     """ATA: lowest-energy accelerator meeting the safety time; fastest
-    response as the deadline-salvage fallback (mirrors ``ATAScheduler``)."""
+    response as the deadline-salvage fallback (mirrors ``ATAScheduler``).
+    ``alive`` ([n] bool) drops dead accelerators from both argmins —
+    the graceful-degradation reroute of serve/durability.py."""
+    mask = jnp.ones((spec.n,), bool) if alive is None else alive
 
     def body(state, task):
         resp = (jnp.maximum(task.arrival, state.avail)
                 + spec.exec_time[:, task.kind] - task.arrival)
-        feasible = resp <= task.safety
+        feasible = (resp <= task.safety) & mask
         energy = spec.energy[:, task.kind]
         a_feas = jnp.argmin(jnp.where(feasible, energy, jnp.inf))
         action = jnp.where(feasible.any(), a_feas,
-                           jnp.argmin(resp)).astype(jnp.int32)
+                           jnp.argmin(jnp.where(mask, resp, jnp.inf))
+                           ).astype(jnp.int32)
         return platform_step(spec, state, task, action)
 
     init = platform_init(spec.n) if state0 is None else state0
@@ -50,7 +59,7 @@ def ata_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None):
 
 
 def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
-                window: int = 30):
+                window: int = 30, alive=None):
     """Windowed Min-Min as a nested scan.
 
     Outer scan walks windows of ``window`` tasks; the inner scan commits
@@ -61,11 +70,13 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
     """
     n = spec.n
     win = window_task_arrays(tasks, window)
+    mask = jnp.ones((n,), bool) if alive is None else alive
 
     def inner(wtasks, carry, _):
         state, scheduled = carry
         ct = (jnp.maximum(wtasks.arrival[:, None], state.avail[None, :])
               + spec.exec_time.T[wtasks.kind])            # [W, n]
+        ct = jnp.where(mask[None, :], ct, jnp.inf)
         ct = jnp.where(scheduled[:, None], jnp.inf, ct)
         flat = jnp.argmin(ct)
         ti, a = flat // n, flat % n

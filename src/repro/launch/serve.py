@@ -65,39 +65,104 @@ def run_token_serving(args) -> int:
     return 0
 
 
+def _durable_mode(args) -> bool:
+    """Any durability-shaped flag routes the QoS engine through
+    ``DurableQoSEngine`` (snapshots / resume / fault injection / mesh)."""
+    return bool(args.snapshot_dir or args.resume or args.state_out
+                or args.serve_waves or args.inject_core is not None)
+
+
 def run_qos_placement_serving(args) -> int:
     """Deadline-aware placement serving: routes arrive over a virtual
     timeline and are admitted EDF (or bucket-FIFO) with Table-5-derived
-    deadlines, aging, preemption and shedding (see ``repro.serve.qos``)."""
+    deadlines, aging, preemption and shedding (see ``repro.serve.qos``).
+
+    Durability flags (``repro.serve.durability``): ``--snapshot-dir`` /
+    ``--snapshot-every`` write crash-recovery snapshots on a segment
+    cadence, ``--resume`` restores the latest one (optionally onto a
+    different mesh with ``--shard``), ``--serve-waves K`` stops after K
+    admission rounds (the crash-point control of the recovery tests),
+    ``--inject-core/--inject-at/--inject-factor`` degrade an accelerator
+    mid-run (``--no-degrade`` disables the graceful-degradation
+    response), and ``--state-out`` writes the bit-exactness digest npz.
+    """
     from repro.core.environment import EnvironmentParams, build_task_queue
     from repro.core.flexai import FlexAIAgent, FlexAIConfig
     from repro.core.hmai import HMAIPlatform
     from repro.serve.qos import QoSConfig, QoSPlacementEngine
 
-    if args.shard:
-        print("note: QoS placement serving is single-device for now "
-              "(--shard ignored; see ROADMAP 'Serving QoS follow-ups')")
+    durable = _durable_mode(args)
+    if args.shard and not durable:
+        print("note: plain QoS placement serving is single-device "
+              "(--shard needs a durability flag, e.g. --resume)")
     plat = HMAIPlatform(capacity_scale=args.rate_scale)
     agent = FlexAIAgent(plat, FlexAIConfig(seed=args.seed))
     if args.weights:
         agent.load_weights(args.weights)
-    eng = QoSPlacementEngine(
-        plat, agent.learner.eval_p,
-        QoSConfig(policy=args.qos or "fifo",
-                  deadline_scale=args.deadline_scale
-                  if args.deadline_scale is not None else 1.0,
-                  slots=args.slots, min_bucket=args.min_bucket),
-        backlog_scale=agent.cfg.backlog_scale)
-    gap = args.arrival_gap if args.arrival_gap is not None else 0.05
-    t = 0.0
-    for i in range(args.routes):
-        queue = build_task_queue(EnvironmentParams(
-            route_km=args.route_km, rate_scale=args.rate_scale,
-            seed=args.seed + i))
-        eng.submit(queue, arrival=t)
-        t += gap
+    cfg = QoSConfig(policy=args.qos or "fifo",
+                    deadline_scale=args.deadline_scale
+                    if args.deadline_scale is not None else 1.0,
+                    slots=args.slots, min_bucket=args.min_bucket)
+
+    if durable:
+        from repro.serve.durability import (DurableQoSEngine,
+                                            FaultInjection, serving_digest)
+        from repro.train.fault_tolerance import PreemptionGuard
+        mesh = None
+        if args.shard:
+            from repro.compat import make_mesh
+            n_dev = len(jax.devices())
+            mesh = make_mesh((n_dev,), ("routes",))
+            print(f"durable QoS mesh: {n_dev} device(s) on axis 'routes'")
+        guard = PreemptionGuard()
+        if args.resume:
+            eng = DurableQoSEngine.restore(
+                args.snapshot_dir, plat,
+                backlog_scale=agent.cfg.backlog_scale, mesh=mesh,
+                guard=guard, snapshot_every=args.snapshot_every or None,
+                trace=args.trace, segment_sleep=args.segment_sleep)
+            print(f"resumed snapshot: now={eng.now:.4f} "
+                  f"completed={len(eng.completed)} "
+                  f"waves={len(eng.wave_log)}", flush=True)
+        else:
+            faults = []
+            if args.inject_core is not None:
+                faults.append(FaultInjection(
+                    at_time=args.inject_at, core=args.inject_core,
+                    factor=args.inject_factor,
+                    handled=not args.no_degrade))
+            eng = DurableQoSEngine(
+                plat, agent.learner.eval_p, cfg,
+                backlog_scale=agent.cfg.backlog_scale,
+                snapshot_dir=args.snapshot_dir,
+                snapshot_every=args.snapshot_every, faults=faults,
+                mesh=mesh, guard=guard, trace=args.trace,
+                segment_sleep=args.segment_sleep)
+    else:
+        eng = QoSPlacementEngine(plat, agent.learner.eval_p, cfg,
+                                 backlog_scale=agent.cfg.backlog_scale)
+
+    if not args.resume:
+        gap = args.arrival_gap if args.arrival_gap is not None else 0.05
+        t = 0.0
+        for i in range(args.routes):
+            queue = build_task_queue(EnvironmentParams(
+                route_km=args.route_km, rate_scale=args.rate_scale,
+                seed=args.seed + i))
+            eng.submit(queue, arrival=t)
+            t += gap
     t0 = time.perf_counter()
-    eng.run_until_done()
+    if durable and args.serve_waves:
+        n = eng.serve_waves(args.serve_waves)
+        eng.snapshot()  # boundary snapshot so a --resume continues here
+        if eng.saver is not None:
+            eng.saver.wait()
+        print(f"partial run: served {n} waves, snapshotted", flush=True)
+    else:
+        eng.run_until_done()
+        if durable and eng.saver is not None:
+            eng.snapshot()
+            eng.saver.wait()
     dt = time.perf_counter() - t0
     s = eng.stats()
     print(f"qos[{s['policy']}] served {s['completed']}/{s['submitted']} "
@@ -106,6 +171,14 @@ def run_qos_placement_serving(args) -> int:
           f"preemptions {s['preemptions']} p50_slack {s['p50_slack_s']:.4f}s "
           f"p99_slack {s['p99_slack_s']:.4f}s "
           f"mean_stm {s['mean_stm_rate']:.3f}")
+    if durable:
+        print(f"durability: snapshots {s['snapshots_written']} "
+              f"segments {s['segments_done']} faults {s['faults_fired']} "
+              f"masked {s['cores_masked']} "
+              f"interrupted {s['interrupted']}")
+        if args.state_out:
+            np.savez(args.state_out, **serving_digest(eng))
+            print(f"state digest -> {args.state_out}")
     return 0
 
 
@@ -178,14 +251,43 @@ def main(argv=None) -> int:
     ap.add_argument("--weights", type=str, default=None,
                     help="npz of trained EvalNet weights")
     ap.add_argument("--seed", type=int, default=0)
+    # durability / crash recovery (repro.serve.durability)
+    ap.add_argument("--snapshot-dir", type=str, default=None,
+                    help="write crash-recovery snapshots here")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot cadence in service segments (0 = only "
+                         "explicit boundary snapshots)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest snapshot in --snapshot-dir "
+                         "instead of submitting fresh routes")
+    ap.add_argument("--serve-waves", type=int, default=0,
+                    help="stop after N admission rounds and snapshot "
+                         "(crash-point control; 0 = run to completion)")
+    ap.add_argument("--state-out", type=str, default=None,
+                    help="write the serving-outcome digest npz here "
+                         "(the recovery bit-exactness contract)")
+    ap.add_argument("--inject-core", type=int, default=None,
+                    help="fault injection: degrade this accelerator")
+    ap.add_argument("--inject-at", type=float, default=0.0,
+                    help="virtual-clock time the fault fires")
+    ap.add_argument("--inject-factor", type=float, default=50.0,
+                    help="exec-time degradation factor (large = dead)")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="disable the graceful-degradation response "
+                         "(the no-mitigation baseline)")
+    ap.add_argument("--segment-sleep", type=float, default=0.0,
+                    help="wall sleep per segment (widens the kill window "
+                         "for the crash-recovery subprocess test)")
+    ap.add_argument("--trace", action="store_true",
+                    help="print per-segment/snapshot/fault progress lines")
     args = ap.parse_args(argv)
 
     if args.placement:
-        # any QoS-shaped flag (even an explicit default value) routes to
-        # the deadline-aware wave engine; the plain batch service has no
-        # timeline for them to act on
+        # any QoS- or durability-shaped flag (even an explicit default
+        # value) routes to the deadline-aware wave engine; the plain
+        # batch service has no timeline for them to act on
         if (args.qos is not None or args.arrival_gap is not None
-                or args.deadline_scale is not None):
+                or args.deadline_scale is not None or _durable_mode(args)):
             return run_qos_placement_serving(args)
         return run_placement_serving(args)
     if args.arch is None:

@@ -31,10 +31,27 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.api import model_api
 from repro.sharding import unbox
+from repro.train import checkpoint as ckpt_lib
 from repro.train.data import DataConfig, batch_fn
 from repro.train.fault_tolerance import (PreemptionGuard, elastic_restore,
                                          run_with_fault_tolerance)
 from repro.train.loop import TrainHyper, init_train_state, make_train_step
+
+
+def _trainer_snapshot(trainer, episode: int) -> dict:
+    """Checkpoint pytree for a ``ScanFlexAI``: the full ``TrainState``
+    (EvalNet/TargNet/Adam/replay/counters/key — every dtype the manifest
+    path must round-trip), the episode cursor, and the model-selection
+    best-so-far, so an interrupted run resumes bit-exactly."""
+    has_best = trainer._best_params is not None
+    return {
+        "ts": trainer.ts,
+        "episode": np.int32(episode),
+        "best_stm": np.float64(trainer._best_stm),
+        "has_best": np.bool_(has_best),
+        "best_p": (trainer._best_params if has_best
+                   else trainer.eval_params()),
+    }
 
 
 def run_flexai_training(args) -> int:
@@ -62,6 +79,36 @@ def run_flexai_training(args) -> int:
         trainer.load_weights(args.weights)
         print(f"resumed weights from {args.weights}")
 
+    # full-state snapshots (TrainState + episode + model-selection best):
+    # unlike --weights, a resume from these is bit-exact — the replay
+    # ring, PRNG key and counters all ride along
+    saver = None
+    start_ep = 0
+    if args.snapshot_dir:
+        saver = ckpt_lib.AsyncCheckpointer(args.snapshot_dir)
+        if args.resume:
+            path = ckpt_lib.latest_checkpoint(args.snapshot_dir)
+            if path is not None:
+                snap = ckpt_lib.restore_checkpoint(
+                    path, _trainer_snapshot(trainer, 0))
+                trainer.ts = snap["ts"]
+                # scalars come from the raw manifest arrays: device_put
+                # under disabled x64 would round the float64 best-stm
+                # through float32 and could flip a later model-selection
+                # comparison
+                _, raw, names = ckpt_lib.load_checkpoint_arrays(path)
+                host = dict(zip(names, raw))
+                start_ep = int(host["['episode']"])
+                if bool(host["['has_best']"]):
+                    trainer._best_stm = float(host["['best_stm']"])
+                    trainer._best_params = snap["best_p"]
+                print(f"resumed trainer snapshot at episode {start_ep}")
+
+    def on_episode(ep, tr):
+        if saver is not None and args.snapshot_every > 0 \
+                and (ep + 1) % args.snapshot_every == 0:
+            saver.save(ep + 1, _trainer_snapshot(tr, ep + 1))
+
     area = Area(args.area)
     queues = [build_task_queue(EnvironmentParams(
         area=area, route_km=args.route_km,
@@ -76,12 +123,17 @@ def run_flexai_training(args) -> int:
           f"{args.episodes} episodes, area={args.area}")
 
     t0 = time.perf_counter()
-    history = trainer.train(queues, episodes=args.episodes,
-                            eval_queue=val_q, eval_every=args.eval_every)
+    # --episodes counts *new* episodes; the engine's `episodes` is the
+    # global end index (range(start_episode, episodes))
+    history = trainer.train(queues, episodes=start_ep + args.episodes,
+                            eval_queue=val_q, eval_every=args.eval_every,
+                            on_episode=on_episode, start_episode=start_ep)
+    if saver is not None:
+        saver.wait()
     dt = time.perf_counter() - t0
     for ep, h in enumerate(history):
         if "eval_stm" in h:
-            print(f"  episode {ep + 1}: eval_stm={h['eval_stm']}")
+            print(f"  episode {start_ep + ep + 1}: eval_stm={h['eval_stm']}")
     steps = int(np.asarray(trainer.ts.env_steps).sum())
     print(f"trained {steps} env steps in {dt:.2f}s "
           f"({steps / max(dt, 1e-9):.0f} steps/s), "
@@ -116,6 +168,14 @@ def main(argv=None) -> int:
                     help="[flexai] shard lanes over all visible devices")
     ap.add_argument("--weights", default=None,
                     help="[flexai] npz checkpoint to resume from / save to")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="[flexai] directory for full-state trainer "
+                         "snapshots (TrainState + episode + best)")
+    ap.add_argument("--snapshot-every", type=int, default=1,
+                    help="[flexai] snapshot cadence in episodes (0=off)")
+    ap.add_argument("--resume", action="store_true",
+                    help="[flexai] resume bit-exactly from the latest "
+                         "snapshot in --snapshot-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-runnable)")

@@ -198,6 +198,7 @@ class QoSPlacementEngine:
         self.spec = spec_from_platform(platform)
         self.params = params
         self.cfg = cfg
+        self.backlog_scale = backlog_scale
         self.svc = (cfg.svc_per_task if cfg.svc_per_task is not None
                     else 0.5 * float(kind_period_table().mean()))
         if executor == "stub":
@@ -207,6 +208,7 @@ class QoSPlacementEngine:
         else:
             self._seg_fn = _segment_fn(self.spec, backlog_scale)
         self.now = 0.0
+        self._halt = False  # set by a durability hook to stop serving
         self._order = 0
         self.pending: list[RouteRequest] = []    # arrival > now
         self.backlog: list[RouteRequest] = []    # eligible, never started
@@ -379,19 +381,45 @@ class QoSPlacementEngine:
         return min(waiters) < (wave.min_deadline(self.cfg.aging_credit)
                                - self.cfg.laxity_s)
 
+    # ---- durability seams (overridden by serve/durability.py) ----------
+
+    def _dispatch_segment(self, wave: Wave, seg: TaskArrays):
+        """Serve one chunk: returns ``(new_state, records)``.  The
+        durability layer swaps in fault-masked / mesh-sharded executors
+        here without touching the wave loop."""
+        return self._seg_fn(self.params, seg, wave.state)
+
+    def _charge_segment(self, wave: Wave, recs) -> None:
+        """Advance the virtual clock for one served segment (the
+        durability layer charges degraded-core overruns here)."""
+        self.now += self.cfg.chunk * self.svc
+
+    def _after_segment(self, wave: Wave) -> None:
+        """Segment-boundary hook: fault firing, heartbeats, snapshot
+        cadence, preemption-guard checks (no-op in the base engine)."""
+
+    def _on_complete(self, req: RouteRequest, lane_final, lane_recs) -> None:
+        """Per-request completion hook (durability: final-state capture
+        for the recovery parity digest)."""
+
+    # --------------------------------------------------------------------
+
     def _run_wave(self, wave: Wave) -> None:
         chunk = self.cfg.chunk
         while wave.progress < wave.bucket:
             p = wave.progress
             seg = jax.tree_util.tree_map(
                 lambda a: a[:, p: p + chunk], wave.batch)
-            state, recs = self._seg_fn(self.params, seg, wave.state)
+            state, recs = self._dispatch_segment(wave, seg)
             self.dispatches += 1
             wave.state = state
             wave.recs.append(recs)
             wave.progress += chunk
-            self.now += chunk * self.svc
+            self._charge_segment(wave, recs)
             self._promote_arrivals()
+            self._after_segment(wave)
+            if self._halt:
+                return  # durability stop: the wave was snapshotted in-flight
             if wave.progress < wave.bucket and self._should_preempt(wave):
                 wave.preemptions += 1
                 self.preemption_count += 1
@@ -414,10 +442,13 @@ class QoSPlacementEngine:
             req.status = COMPLETED
             req.finish = self.now
             req.slack = req.deadline - self.now
+            self._on_complete(req, lane_final, lane_recs)
             self.completed.append(req)
 
     def run_until_done(self, max_waves: int = 100_000) -> None:
         for _ in range(max_waves):
+            if self._halt:
+                return
             wave = self._next_wave()
             if wave is None:
                 return

@@ -73,6 +73,34 @@ def latest_checkpoint(directory: str) -> Optional[str]:
     return os.path.join(directory, sorted(steps)[-1])
 
 
+def _load_entry(path: str, entry: dict) -> np.ndarray:
+    """Load one manifest array, recovering extension dtypes.
+
+    ``np.save`` round-trips ml_dtypes extension arrays (bfloat16,
+    float8_*) as raw void bytes — ``np.load`` hands back ``|V2`` with the
+    values intact but the type gone.  The manifest dtype is the source of
+    truth: reinterpret the buffer when the loaded dtype disagrees.
+    """
+    arr = np.load(os.path.join(path, entry["file"]))
+    want = entry["dtype"]
+    if str(arr.dtype) != want and arr.dtype.kind == "V":
+        import ml_dtypes
+        arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
+    return arr
+
+
+def load_checkpoint_arrays(path: str) -> tuple[int, list, list]:
+    """Template-free restore: ``(step, host_arrays, names)`` in manifest
+    order.  This is the self-describing path the serving snapshots use —
+    after a crash there is no live object tree to mirror, so the manifest
+    itself defines the structure."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = [_load_entry(path, e) for e in manifest["arrays"]]
+    names = [e["name"] for e in manifest["arrays"]]
+    return manifest["step"], arrays, names
+
+
 def restore_checkpoint(path: str, template: Any, shardings: Any = None) -> Any:
     """Restore into the structure of ``template``.
 
@@ -89,7 +117,7 @@ def restore_checkpoint(path: str, template: Any, shardings: Any = None) -> Any:
                     if shardings is not None else [None] * len(leaves))
     for name, leaf, sh in zip(names, leaves, shard_leaves):
         entry = by_name[name]
-        arr = np.load(os.path.join(path, entry["file"]))
+        arr = _load_entry(path, entry)
         expected = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expected:
             raise ValueError(
@@ -108,33 +136,64 @@ def checkpoint_step(path: str) -> int:
 
 
 class AsyncCheckpointer:
-    """Snapshot synchronously, write on a background thread."""
+    """Snapshot synchronously, write on a background thread.
+
+    Writes are **serialized in submission order** (each background write
+    chains on the previous one) and **stale steps lose**: a ``save`` whose
+    step is <= the newest step already submitted is dropped, so
+    ``latest_checkpoint`` can never go backwards even when saves overlap
+    or a caller resubmits an old step.  ``save()`` itself never blocks on
+    I/O — the host snapshot copy is its only synchronous cost.
+
+    ``state`` may also be a zero-arg callable producing the pytree: then
+    even the flatten/device-transfer/host copy runs on the writer thread
+    and ``save()`` costs only the submission.  The caller owns
+    consistency — every leaf the callable closes over must be immutable
+    (jax arrays are; host arrays must not be mutated in place).
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._highest_step: int = -1
 
     def save(self, step: int, state: Any) -> None:
-        self.wait()  # one outstanding write at a time
-        names, leaves, _ = _flatten_with_names(state)
-        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        if callable(state):
+            names = host = None  # materialized on the writer thread
+        else:
+            names, leaves, _ = _flatten_with_names(state)
+            host = [np.asarray(jax.device_get(x)) for x in leaves]
+        with self._lock:
+            if step <= self._highest_step:
+                return  # a newer (or equal) step is already in flight
+            self._highest_step = step
+            prev = self._thread
 
-        def work():
-            try:
-                _write(self.directory, step, names, host)
-                self._gc()
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+            def work():
+                if prev is not None:
+                    prev.join()  # keep disk order == submission order
+                try:
+                    if names is None:
+                        n, leaves, _ = _flatten_with_names(state())
+                        h = [np.asarray(jax.device_get(x)) for x in leaves]
+                        _write(self.directory, step, n, h)
+                    else:
+                        _write(self.directory, step, names, host)
+                    self._gc()
+                except BaseException as e:  # surfaced on next wait()
+                    self._error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
         if self._error is not None:
             err, self._error = self._error, None
             raise err

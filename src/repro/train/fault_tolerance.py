@@ -36,13 +36,18 @@ class StragglerDetector:
     """
 
     def __init__(self, n_hosts: int, threshold: float = 1.5,
-                 window: int = 16, dead_after_s: float = 60.0):
+                 window: int = 16, dead_after_s: float = 60.0,
+                 clock: Optional[Callable[[], float]] = None):
         self.n_hosts = n_hosts
         self.threshold = threshold
         self.window = window
         self.dead_after_s = dead_after_s
+        # ``clock`` makes heartbeat timeouts deterministic: the QoS serving
+        # layer injects its virtual clock, tests inject a counter — only
+        # the default wall-clock path ever touches time.time()
+        self._clock = time.time if clock is None else clock
         self._times: dict[int, list[float]] = {h: [] for h in range(n_hosts)}
-        self._last_seen: dict[int, float] = {h: time.time()
+        self._last_seen: dict[int, float] = {h: self._clock()
                                              for h in range(n_hosts)}
 
     def record(self, hb: HeartbeatRecord) -> None:
@@ -60,7 +65,7 @@ class StragglerDetector:
         return [h for h, m in means.items() if m > self.threshold * median]
 
     def dead_hosts(self, now: Optional[float] = None) -> list[int]:
-        now = time.time() if now is None else now
+        now = self._clock() if now is None else now
         return [h for h, seen in self._last_seen.items()
                 if now - seen > self.dead_after_s]
 

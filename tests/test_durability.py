@@ -1,0 +1,336 @@
+"""Durability contract for the crash-recoverable serving layer
+(``repro.serve.durability``):
+
+* **snapshot round-trip** — pack/unpack of the full serving state (stub
+  and real executor) reproduces the uninterrupted run bit-exactly, and
+  taking snapshots never perturbs the serving outcome;
+* **crash recovery** — a run cut off mid-wave restores from its latest
+  on-disk snapshot and finishes with the reference digest, including
+  through a real SIGKILL of the serving process (subprocess test);
+* **elastic resume** — a snapshot taken on one device restores onto a
+  two-device ``("routes",)`` mesh with placement parity (subprocess);
+* **fault injection** — a degraded accelerator with graceful degradation
+  (detect -> mask -> reroute -> shed) strictly beats the same fault
+  unhandled, and the unhandled arm honestly pays the overrun.
+
+Bit-exactness is always checked via ``serving_digest`` — completed
+uids/finish/slack, shed uids, the wave log, per-request placements and
+final platform states.
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.flexai import FlexAIAgent, FlexAIConfig
+from repro.core.hmai import HMAIPlatform
+from repro.core.tasks import TaskArrays, pad_route_batch
+from repro.serve.durability import (DurableQoSEngine, FaultInjection,
+                                    decode_snapshot, digests_equal,
+                                    encode_snapshot, pack_engine,
+                                    serving_digest)
+from repro.serve.qos import QoSConfig
+from repro.train import checkpoint as ckpt_lib
+
+RS = 0.05
+_PLATFORM = HMAIPlatform(capacity_scale=RS)
+_AGENT = FlexAIAgent(_PLATFORM, FlexAIConfig(seed=3))
+
+
+def _route(n: int, seed: int = 0) -> TaskArrays:
+    rng = np.random.default_rng(seed)
+    return TaskArrays(
+        kind=rng.integers(0, 3, n).astype(np.int32),
+        arrival=np.sort(rng.uniform(0, 0.01 * n, n)).astype(np.float32),
+        safety=np.full(n, 0.05, np.float32),
+        group=np.zeros(n, np.int32),
+        valid=np.ones(n, bool))
+
+
+def _engine(executor=None, **kw) -> DurableQoSEngine:
+    cfg = QoSConfig(policy="edf", slots=2, chunk=16, min_bucket=16)
+    return DurableQoSEngine(_PLATFORM, _AGENT.learner.eval_p, cfg,
+                            backlog_scale=_AGENT.cfg.backlog_scale,
+                            executor=executor, **kw)
+
+
+def _submit(eng, n_req=6, seed=0, tight=False):
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(n_req):
+        n = int(rng.integers(40, 90))
+        budget = None
+        if tight:
+            budget = t + float(eng._bucket(n) * eng.base_svc
+                               * rng.uniform(1.0, 2.0))
+        eng.submit(_route(n, seed + 10 * i), arrival=t, deadline=budget)
+        t += float(rng.uniform(0.0, eng.base_svc * 16))
+
+
+# ---------------------------------------------------------------------------
+# snapshot round-trip (in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["stub", None],
+                         ids=["stub", "real"])
+def test_pack_unpack_roundtrip_bit_exact(executor):
+    """Crash at a wave boundary, rebuild from the in-memory pack, finish:
+    the digest must equal the uninterrupted run's."""
+    n_req = 6 if executor == "stub" else 4
+    ref = _engine(executor)
+    _submit(ref, n_req)
+    ref.run_until_done()
+
+    crashed = _engine(executor)
+    _submit(crashed, n_req)
+    crashed.serve_waves(2)
+    arrays, meta = pack_engine(crashed)
+    resumed = DurableQoSEngine.from_packed(
+        arrays, meta, _PLATFORM,
+        backlog_scale=_AGENT.cfg.backlog_scale, executor=executor)
+    resumed.run_until_done()
+    assert digests_equal(serving_digest(ref), serving_digest(resumed))
+
+
+def test_blob_encode_roundtrip():
+    """The 2-file on-disk form (byte blob + JSON meta) loses nothing."""
+    eng = _engine("stub")
+    _submit(eng)
+    eng.serve_waves(2)
+    arrays, meta = pack_engine(eng)
+    arrays2, meta2 = decode_snapshot(encode_snapshot(arrays, meta))
+    assert meta2 == __import__("json").loads(
+        __import__("json").dumps(meta))  # json-normalized equality
+    assert len(arrays) == len(arrays2)
+    for a, b in zip(arrays, arrays2):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_disk_restore_mid_wave_bit_exact(tmp_path):
+    """The cadence snapshot lands *inside* a wave; restoring it resumes
+    the in-flight wave (re-applying the preemption check) and still ends
+    bit-exact vs the uninterrupted run."""
+    ref = _engine()
+    _submit(ref, 4)
+    ref.run_until_done()
+
+    crashed = _engine(snapshot_dir=str(tmp_path), snapshot_every=3)
+    _submit(crashed, 4)
+    crashed.serve_waves(2)  # crash: no boundary snapshot
+    crashed.saver.wait()
+    assert crashed.snapshots_written > 0
+
+    restored = DurableQoSEngine.restore(
+        str(tmp_path), _PLATFORM, backlog_scale=_AGENT.cfg.backlog_scale)
+    assert restored._inflight is not None  # genuinely mid-wave
+    restored.run_until_done()
+    restored.saver.wait()
+    assert digests_equal(serving_digest(ref), serving_digest(restored))
+
+
+def test_snapshots_do_not_perturb_serving(tmp_path):
+    ref = _engine("stub")
+    _submit(ref)
+    ref.run_until_done()
+
+    snap = _engine("stub", snapshot_dir=str(tmp_path), snapshot_every=4)
+    _submit(snap)
+    snap.run_until_done()
+    snap.saver.wait()
+    assert snap.snapshots_written > 0
+    assert digests_equal(serving_digest(ref), serving_digest(snap))
+
+
+def test_restored_engine_keeps_snapshotting_monotonically(tmp_path):
+    """A restored engine inherits the snapshot cadence, and its snapshot
+    steps continue the crashed run's counter — ``latest_checkpoint``
+    never goes backwards across the crash."""
+    crashed = _engine("stub", snapshot_dir=str(tmp_path), snapshot_every=3)
+    _submit(crashed)
+    crashed.serve_waves(2)
+    crashed.saver.wait()
+    step_at_crash = ckpt_lib.checkpoint_step(
+        ckpt_lib.latest_checkpoint(str(tmp_path)))
+    assert step_at_crash == crashed.snapshots_written
+
+    restored = DurableQoSEngine.restore(
+        str(tmp_path), _PLATFORM, backlog_scale=_AGENT.cfg.backlog_scale,
+        executor="stub")
+    restored.run_until_done()
+    restored.saver.wait()
+    assert restored.snapshots_written > step_at_crash
+    assert ckpt_lib.checkpoint_step(
+        ckpt_lib.latest_checkpoint(str(tmp_path))) \
+        == restored.snapshots_written
+
+
+# ---------------------------------------------------------------------------
+# fault injection + graceful degradation (in-process)
+# ---------------------------------------------------------------------------
+
+def _fault_workload():
+    """The recovery benchmark's degradation workload verbatim: an offered
+    load high enough that the policy cannot simply route around a dead
+    core — at light load a degraded exec table alone reroutes placements
+    and handled/unhandled become indistinguishable."""
+    from benchmarks.recovery import _busiest_core, _engine as bench_engine
+    from benchmarks.recovery import _routes, _submit
+    plat = HMAIPlatform(capacity_scale=RS)
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=0))
+    queues = _routes(16)
+
+    def run(faults=None):
+        eng = bench_engine(plat, agent, faults=faults)
+        _submit(eng, queues)
+        eng.run_until_done()
+        return eng
+
+    ref = run()
+    fault = lambda handled: [FaultInjection(  # noqa: E731
+        at_time=0.25 * float(ref.now), core=_busiest_core(ref),
+        factor=50.0, handled=handled)]
+    return ref, run(fault(True)), run(fault(False))
+
+
+def test_fault_graceful_degradation_contract(fixed_seed):
+    ref, handled, unhandled = _fault_workload()
+    sh, su = handled.stats(), unhandled.stats()
+    assert sh["faults_fired"] == su["faults_fired"] == 1
+    # graceful degradation: the dead core is heartbeat-detected, masked
+    # out, and the capacity loss shows up as a service-rate rescale that
+    # drives QoS shedding
+    assert sh["cores_masked"] == 1 and su["cores_masked"] == 0
+    assert sh["svc_scale"] > 1.0
+    assert handled.fired[0]["detected_at"] is not None
+    # rescheduling onto survivors: the scheduler's belief drops the core,
+    # and the last-finishing request (served long after detection) never
+    # lands a task on it
+    masked = handled.fired[0]["core"]
+    assert not handled.alive[masked]
+    last = max((r for r in handled.completed if r.summary is not None),
+               key=lambda r: r.finish)
+    assert masked not in np.asarray(last.summary["placements"]).tolist()
+    # the whole point: mitigation strictly reduces deadline misses
+    assert sh["miss_rate"] < su["miss_rate"]
+    # and an unhandled fault honestly pays the degraded core's overrun
+    assert unhandled.now > ref.now
+
+
+# ---------------------------------------------------------------------------
+# mesh dispatch + elastic padding (in-process, 1 device)
+# ---------------------------------------------------------------------------
+
+def test_mesh_dispatch_parity_single_device():
+    """The shard_map lockstep path (mesh dispatch + lane padding) must be
+    a pure execution detail: same digest as the plain engine."""
+    from repro.compat import make_mesh
+    import jax
+    ref = _engine()
+    _submit(ref, 4)
+    ref.run_until_done()
+
+    mesh = make_mesh((len(jax.devices()),), ("routes",))
+    meshed = _engine(mesh=mesh)
+    _submit(meshed, 4)
+    meshed.run_until_done()
+    assert digests_equal(serving_digest(ref), serving_digest(meshed))
+
+
+def test_pad_route_batch_pads_with_invalid_lanes():
+    batch = TaskArrays(*[np.stack([np.asarray(x)] * 3)
+                         for x in _route(20, seed=1)])
+    padded = pad_route_batch(batch, 2)
+    assert padded.kind.shape[0] == 4
+    np.testing.assert_array_equal(padded.valid[:3], batch.valid)
+    assert not padded.valid[3].any()
+
+
+# ---------------------------------------------------------------------------
+# subprocess recovery: SIGKILL mid-wave, elastic resume on a bigger mesh
+# ---------------------------------------------------------------------------
+
+_SERVE = [sys.executable, "-m", "repro.launch.serve", "--placement",
+          "--routes", "4", "--rate-scale", "0.005", "--seed", "0"]
+
+
+def _env(n_devices=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    if n_devices:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n_devices}"
+    return env
+
+
+def _digest_npz(path):
+    with np.load(path, allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _run(args, env, timeout=240):
+    r = subprocess.run(_SERVE + args, env=env, capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, f"serve failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_sigkill_mid_wave_recovery_bit_exact(tmp_path):
+    """Kill -9 the serving process between wave segments (after its 3rd
+    cadence snapshot), resume from disk, and require the final digest to
+    equal an uninterrupted run's — the ISSUE's recovery contract."""
+    ref_out = str(tmp_path / "ref.npz")
+    _run(["--qos", "edf", "--state-out", ref_out], _env())
+
+    snap_dir = str(tmp_path / "snaps")
+    proc = subprocess.Popen(
+        _SERVE + ["--qos", "edf", "--snapshot-dir", snap_dir,
+                  "--snapshot-every", "4", "--segment-sleep", "0.02",
+                  "--trace"],
+        env=_env(), stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    snapshots_seen, deadline = 0, time.time() + 240
+    try:
+        for line in proc.stdout:
+            if line.startswith("SNAPSHOT"):
+                snapshots_seen += 1
+                if snapshots_seen >= 3:
+                    break
+            assert time.time() < deadline, "no snapshots before timeout"
+    finally:
+        if proc.poll() is None:
+            os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=30)
+        proc.stdout.close()
+    assert snapshots_seen >= 3, "server exited before being killed"
+
+    out = str(tmp_path / "resumed.npz")
+    stdout = _run(["--resume", "--snapshot-dir", snap_dir,
+                   "--state-out", out], _env())
+    assert "resumed snapshot" in stdout
+    assert digests_equal(_digest_npz(ref_out), _digest_npz(out))
+
+
+@pytest.mark.slow
+def test_elastic_resume_onto_two_device_mesh(tmp_path):
+    """Snapshot a partial single-device run, resume it onto a 2-device
+    ``("routes",)`` mesh: placement parity with the single-device run."""
+    ref_out = str(tmp_path / "ref.npz")
+    _run(["--qos", "edf", "--state-out", ref_out], _env())
+
+    snap_dir = str(tmp_path / "snaps")
+    stdout = _run(["--qos", "edf", "--snapshot-dir", snap_dir,
+                   "--serve-waves", "2"], _env())
+    assert "partial run" in stdout
+
+    out = str(tmp_path / "elastic.npz")
+    stdout = _run(["--resume", "--shard", "--snapshot-dir", snap_dir,
+                   "--state-out", out], _env(n_devices=2))
+    assert "durable QoS mesh: 2 device(s)" in stdout
+    assert digests_equal(_digest_npz(ref_out), _digest_npz(out))

@@ -8,7 +8,11 @@
 * **EDF dominance** — on equal-service workloads (one bucket, common
   arrival), EDF admission's deadline-miss rate is <= bucket-FIFO's;
 * **preemption round-trip** — a preempted wave's checkpoint/resume through
-  the ``PlatformState`` seam reproduces the uninterrupted scan bit-exactly.
+  the ``PlatformState`` seam reproduces the uninterrupted scan bit-exactly;
+* **crash-replay conservation** — killing a durable engine after any
+  number of admission rounds and replaying from its packed snapshot
+  still ends with every submitted uid in exactly one of completed /
+  dead-letter (nothing lost, nothing duplicated by the replay).
 
 Each property is a plain check function; with ``hypothesis`` installed
 (requirements-dev.txt) the checks run under randomized search with an
@@ -36,6 +40,7 @@ except ImportError:
 from repro.core.hmai import HMAIPlatform
 from repro.core.flexai import FlexAIAgent, FlexAIConfig
 from repro.core.tasks import TaskArrays
+from repro.serve.durability import DurableQoSEngine, pack_engine
 from repro.serve.qos import COMPLETED, QoSConfig, QoSPlacementEngine, SHED
 
 MAX_EXAMPLES = int(os.environ.get("SERVE_QOS_EXAMPLES", "30"))
@@ -86,6 +91,43 @@ def check_conservation(policy, slots, preempt, shed, jobs, seed):
     assert all(r.status == COMPLETED for r in eng.completed)
     s = eng.stats()
     assert s["submitted"] == len(jobs)
+    assert s["completed"] + s["shed"] == len(jobs)
+
+
+def check_crash_replay_conservation(policy, slots, kill_after, jobs, seed):
+    """Kill a durable engine after ``kill_after`` admission rounds,
+    replay from its in-memory snapshot, and require conservation on the
+    combined history: every submitted uid in exactly one of completed /
+    dead-letter, queues drained, dead-letter entries from before the
+    crash preserved by the replay."""
+    cfg = QoSConfig(policy=policy, slots=slots, chunk=16, min_bucket=16)
+
+    def submit_all(eng):
+        for i, (n, arr, budget) in enumerate(jobs):
+            eng.submit(_route(n, seed + i), arrival=arr,
+                       deadline=arr + budget)
+
+    eng = DurableQoSEngine(_PLATFORM, _AGENT.learner.eval_p, cfg,
+                           backlog_scale=_AGENT.cfg.backlog_scale,
+                           executor="stub")
+    submit_all(eng)
+    eng.serve_waves(kill_after)
+    shed_before = [d["uid"] for d in eng.dead_letter]
+
+    arrays, meta = pack_engine(eng)
+    resumed = DurableQoSEngine.from_packed(
+        arrays, meta, _PLATFORM,
+        backlog_scale=_AGENT.cfg.backlog_scale, executor="stub")
+    resumed.run_until_done()
+
+    assert not resumed.backlog and not resumed.pending \
+        and not resumed.preempted
+    done = [r.uid for r in resumed.completed]
+    shed_uids = [d["uid"] for d in resumed.dead_letter]
+    assert sorted(done + shed_uids) == list(range(len(jobs)))
+    assert shed_uids[: len(shed_before)] == shed_before
+    assert all(r.status == COMPLETED for r in resumed.completed)
+    s = resumed.stats()
     assert s["completed"] + s["shed"] == len(jobs)
 
 
@@ -215,6 +257,15 @@ if HAVE_HYPOTHESIS:
                                             seed):
         check_preemption_roundtrip(n_long, n_short, arrive_frac, seed)
 
+    @SETTINGS
+    @given(policy=st.sampled_from(["edf", "fifo"]), slots=st.integers(1, 3),
+           kill_after=st.integers(0, 8), jobs=_JOBS,
+           seed=st.integers(0, 999))
+    def test_crash_replay_conservation(policy, slots, kill_after, jobs,
+                                       seed):
+        check_crash_replay_conservation(policy, slots, kill_after, jobs,
+                                        seed)
+
 
 # ---------------------------------------------------------------------------
 # fixed-seed fallback drivers (air-gapped: no hypothesis available)
@@ -256,6 +307,20 @@ def test_edf_dominates_fifo_seeded(seed):
                         budgets=[float(rng.uniform(0.005, 0.25))
                                  for _ in range(12)],
                         seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+def test_crash_replay_conservation_seeded(seed):
+    rng = np.random.default_rng(4000 + seed)
+    jobs = [(int(rng.integers(1, 41)), float(rng.uniform(0, 0.5)),
+             float(rng.uniform(0.005, 0.6)))
+            for _ in range(int(rng.integers(1, 13)))]
+    check_crash_replay_conservation(policy=("edf", "fifo")[seed % 2],
+                                    slots=int(rng.integers(1, 4)),
+                                    kill_after=int(rng.integers(0, 9)),
+                                    jobs=jobs, seed=seed)
 
 
 @pytest.mark.skipif(HAVE_HYPOTHESIS,
