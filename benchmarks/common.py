@@ -18,6 +18,72 @@ RESULTS_DIR = os.environ.get("BENCH_RESULTS_DIR", "experiments/bench")
 # load-matched subsampling (see HMAIPlatform.capacity_scale)
 RATE_SCALE = 0.05
 
+# ---------------------------------------------------------------------------
+# XLA host tuning (recorded in every BENCH_*.json)
+# ---------------------------------------------------------------------------
+
+# Keeps the per-step host marker out of the compiled region, so scan-heavy
+# dispatches are not split at arbitrary points by profiling markers.
+STEP_MARKER_FLAG = "--xla_step_marker_location=STEP_MARK_AT_ENTRY"
+
+_TCMALLOC_GLOBS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc*.so*",
+    "/usr/lib/libtcmalloc*.so*",
+    "/usr/local/lib/libtcmalloc*.so*",
+)
+
+
+def find_tcmalloc():
+    """First tcmalloc shared object on this host, or None.  Preloading it
+    cuts allocator contention on many-core hosts; it can only take effect
+    via LD_PRELOAD *before* process start, so callers record availability
+    here and scripts/ci.sh / spawned children do the actual preload."""
+    import glob
+    for pat in _TCMALLOC_GLOBS:
+        hits = sorted(glob.glob(pat))
+        if hits:
+            return hits[0]
+    return None
+
+
+def host_tuning(devices: int | None = None) -> dict:
+    """The XLA host-tuning flags in effect for this process, as recorded
+    in each ``BENCH_*.json`` — so a result file says which knobs were on
+    when its numbers were measured (forced host device count, step-marker
+    placement, tcmalloc preload)."""
+    import re
+    flags = os.environ.get("XLA_FLAGS", "")
+    forced = re.findall(r"--xla_force_host_platform_device_count=(\d+)",
+                        flags)
+    tc = find_tcmalloc()
+    return {
+        "nproc": os.cpu_count(),
+        "xla_force_host_platform_device_count":
+            int(forced[-1]) if forced
+            else (devices if devices is not None else 1),
+        "step_marker_at_entry": STEP_MARKER_FLAG in flags,
+        "tcmalloc_path": tc,
+        "tcmalloc_active": bool(tc)
+            and "tcmalloc" in os.environ.get("LD_PRELOAD", ""),
+    }
+
+
+def tuned_child_env(devices: int) -> dict:
+    """Environment for a multi-device benchmark child: forced host device
+    count (must precede jax import — last flag wins inside XLA_FLAGS),
+    step markers at entry, and tcmalloc preloaded when the host has it."""
+    env = dict(os.environ)
+    base = env.get("XLA_FLAGS", "")
+    if STEP_MARKER_FLAG not in base:
+        base = f"{base} {STEP_MARKER_FLAG}".strip()
+    env["XLA_FLAGS"] = (f"{base} "
+                        f"--xla_force_host_platform_device_count={devices}")
+    tc = find_tcmalloc()
+    if tc and "tcmalloc" not in env.get("LD_PRELOAD", ""):
+        env["LD_PRELOAD"] = tc + (os.pathsep + env["LD_PRELOAD"]
+                                  if env.get("LD_PRELOAD") else "")
+    return env
+
 
 def timer(fn, *args, warmup: int = 1, iters: int = 3, **kwargs):
     """Returns (last_result, seconds_per_call)."""
@@ -50,8 +116,7 @@ def spawn_forced_device_child(module: str, devices: int, args: list,
     shared protocol of the multi-device benchmark children."""
     import subprocess
     import sys
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env = tuned_child_env(devices)
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
         + env.get("PYTHONPATH", "")

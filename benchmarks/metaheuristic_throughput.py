@@ -21,7 +21,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import RATE_SCALE, platform, row, save
+from benchmarks.common import (RATE_SCALE, host_tuning, platform, row,
+                               save)
 
 
 def _routes(n: int, km: float):
@@ -141,6 +142,7 @@ def run(quick: bool = True) -> list:
     results["meets_20x_ga"] = bool(
         results["ga"]["speedup_device_vs_loop"] >= 20.0
         or results["ga"]["speedup_batch_vs_loop"] >= 20.0)
+    results["host_tuning"] = host_tuning()
     with open(os.path.join(os.getcwd(), "BENCH_metaheuristics.json"),
               "w") as f:
         json.dump(results, f, indent=1)

@@ -31,7 +31,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import RATE_SCALE, row, save
+from benchmarks.common import RATE_SCALE, host_tuning, row, save
 
 SNAPSHOT_EVERY = 64
 
@@ -204,6 +204,7 @@ def run(quick: bool = True) -> list:
                     result["gate"]["degradation_strictly_better"],
                     paper="graceful degradation must beat no mitigation"))
     save("recovery", rows)
+    result["host_tuning"] = host_tuning()
     with open(os.path.join(os.getcwd(), "BENCH_recovery.json"), "w") as f:
         json.dump(result, f, indent=1)
     return rows

@@ -25,6 +25,7 @@ MODULES = [
     "metaheuristic_throughput",
     "sharded_engine",
     "training_throughput",
+    "pipeline",
     "kernel_micro",
     "roofline",
     "recovery",

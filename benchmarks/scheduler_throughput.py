@@ -13,7 +13,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import RATE_SCALE, platform, row, save
+from benchmarks.common import (RATE_SCALE, host_tuning, platform, row,
+                               save)
 
 
 def _routes(n: int, km: float):
@@ -87,6 +88,7 @@ def run(quick: bool = True) -> list:
         "speedup_batch_vs_loop": round(batch_tps / loop_tps, 2),
         "meets_table5_950fps": bool(scan_tps >= 950.0),
     }
+    results["host_tuning"] = host_tuning()
     with open(os.path.join(os.getcwd(), "BENCH_scheduler.json"), "w") as f:
         json.dump(results, f, indent=1)
 

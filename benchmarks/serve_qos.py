@@ -24,7 +24,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import RATE_SCALE, row, save
+from benchmarks.common import RATE_SCALE, host_tuning, row, save
 
 LOADS = (0.5, 1.0, 2.0)
 
@@ -113,6 +113,7 @@ def run(quick: bool = True) -> list:
                     paper="EDF admission must beat bucket-FIFO when "
                           "overloaded"))
     save("serve_qos", rows)
+    result["host_tuning"] = host_tuning()
     with open(os.path.join(os.getcwd(), "BENCH_serving.json"), "w") as f:
         json.dump(result, f, indent=1)
     return rows

@@ -125,7 +125,7 @@ def _spawn(devices: int, lanes: int, tasks: int, iters: int,
 
 
 def run(quick: bool = True) -> list:
-    from benchmarks.common import row, save
+    from benchmarks.common import host_tuning, row, save
 
     # wide lanes: per-step compute must dominate the scan-step overhead for
     # route sharding to pay (at width <=32 the engine is overhead-bound and
@@ -148,6 +148,7 @@ def run(quick: bool = True) -> list:
         "placements_equal": all(r["placements_equal"]
                                 for r in results.values()),
     }
+    summary["host_tuning"] = host_tuning(devices=4)
     with open(os.path.join(os.getcwd(), "BENCH_sharded_engine.json"),
               "w") as f:
         json.dump(summary, f, indent=1)

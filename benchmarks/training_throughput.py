@@ -324,7 +324,7 @@ def _spawn(devices: int, lanes: int, tasks: int, iters: int) -> dict:
 # ---------------------------------------------------------------------------
 
 def run(quick: bool = True) -> list:
-    from benchmarks.common import row, save
+    from benchmarks.common import host_tuning, row, save
 
     tasks = 384 if quick else 1024
     episodes = 2 if quick else 4
@@ -353,6 +353,7 @@ def run(quick: bool = True) -> list:
                 ">= 4 cores (collective cost is negligible: an "
                 "axis-free shard_map variant times the same)",
     }
+    summary["host_tuning"] = host_tuning(devices=4)
     with open(os.path.join(os.getcwd(), "BENCH_training.json"), "w") as f:
         json.dump(summary, f, indent=1)
 

@@ -24,7 +24,12 @@
 #    fixed-seed sweep otherwise, bounded example budget) plus the
 #    BENCH_serving.json contract — EDF-with-aging must never miss more
 #    deadlines than bucket-FIFO and must be strictly better overloaded.
-# 8. Durability gate: the full durability suite incl. the slow
+# 8. Pipeline gate (BENCH_pipeline.json): stage-grouped EFT placement
+#    over >= 2 accelerator groups must beat single-stage placement on
+#    drain-workload makespan at equal device count, with the flattened
+#    wavefront bit-exact vs the task-major reference and the (2,2)-mesh
+#    shard_map run bit-exact vs the flattened engine.
+# 9. Durability gate: the full durability suite incl. the slow
 #    subprocess tests (SIGKILL mid-wave -> restore -> bit-exact digest;
 #    elastic resume onto a 2-device mesh), then the recovery benchmark
 #    smoke gating on BENCH_recovery.json — crash-recovery parity exact,
@@ -33,6 +38,22 @@
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+# XLA host tuning (recorded in each BENCH_*.json via benchmarks.common):
+# step markers placed at entry so profiling never splits a fused scan;
+# tcmalloc preloaded when the host ships it (allocator contention on
+# many-core hosts).  Forced device counts are appended per-gate below and
+# win because the last flag takes precedence inside XLA_FLAGS.
+export XLA_FLAGS="${XLA_FLAGS:-} --xla_step_marker_location=STEP_MARK_AT_ENTRY"
+TCMALLOC="$(ls /usr/lib/x86_64-linux-gnu/libtcmalloc*.so* \
+    /usr/lib/libtcmalloc*.so* /usr/local/lib/libtcmalloc*.so* \
+    2>/dev/null | head -n 1 || true)"
+if [ -n "${TCMALLOC}" ]; then
+    export LD_PRELOAD="${TCMALLOC}${LD_PRELOAD:+:${LD_PRELOAD}}"
+    echo "host tuning: tcmalloc preloaded (${TCMALLOC})"
+else
+    echo "host tuning: no tcmalloc on this host (recorded as absent)"
+fi
 
 echo "== dev deps (hypothesis; best-effort) =="
 python -m pip install -q -r requirements-dev.txt \
@@ -103,6 +124,23 @@ XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
         --dp-lanes 8 --tasks 96 --iters 1
 dp=$?
 
+echo "== pipeline gate (4 host devices: stage groups vs single-stage) =="
+python -m benchmarks.run --only pipeline \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_pipeline.json"))
+g, c = r["gate"], r["child"]
+ok = (g["pipeline_beats_single_stage"] and g["parity_flat_vs_reference"]
+      and g["parity_sharded_vs_flat"])
+print(f"makespan_gain={c['makespan_gain']}x "
+      f"({c['makespan_pipeline_s']:.2f}s pipelined vs "
+      f"{c['makespan_single_stage_s']:.2f}s single-stage) "
+      f"flat_vs_ref={g['parity_flat_vs_reference']} "
+      f"sharded_vs_flat={g['parity_sharded_vs_flat']}")
+sys.exit(0 if ok else 1)
+EOF
+pipeline=$?
+
 echo "== benchmark smoke (quick mode: metaheuristic throughput) =="
 python -m benchmarks.run --only metaheuristic_throughput \
     && python - <<'EOF'
@@ -135,9 +173,10 @@ sys.exit(0 if ok else 1)
 EOF
 train_bench=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} =="
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} =="
 [ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
-    && [ "${dp}" -eq 0 ] && [ "${bench}" -eq 0 ] \
+    && [ "${dp}" -eq 0 ] && [ "${pipeline}" -eq 0 ] \
+    && [ "${bench}" -eq 0 ] \
     && [ "${train_bench}" -eq 0 ] && [ "${serve_prop}" -eq 0 ] \
     && [ "${serve_bench}" -eq 0 ] && [ "${durability}" -eq 0 ] \
     && [ "${recovery}" -eq 0 ]

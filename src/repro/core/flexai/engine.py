@@ -302,7 +302,7 @@ def dp_train_init(key, state_dim: int, n_actions: int, replay_capacity: int,
 
 
 def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
-                  n_shards: int = 1):
+                  n_shards: int = 1, chunk_collectives: bool = True):
     """Un-jitted data-parallel fused episode over ``lanes`` local routes.
 
     Unlike :func:`_train_run` (N *independent* population agents), every
@@ -317,10 +317,19 @@ def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
       counters (``lax.psum`` of per-shard valid-task counts), so every
       shard takes the identical parameter trajectory.
 
-    The TD gradient is computed every scan step and the application masked
-    with ``where(do_update, ...)`` instead of ``lax.cond`` — the collective
-    must execute unconditionally on all shards, and a conditioned ``pmean``
-    would deadlock the mesh whenever shards disagreed.
+    Collective layout (``chunk_collectives=True``, the default): only the
+    2-float update-gate stats all-reduce every scan step; the TD batch
+    sample, gradient computation, gradient all-reduce and Adam step run
+    inside ``lax.cond`` on optimizer steps only (MaxText-style chunking —
+    the big collective fires once per optimizer step, not once per scan
+    step).  A conditioned ``pmean`` is safe here *because the predicate is
+    shard-uniform by construction*: it derives solely from the psum'd
+    global counters, so every shard takes the same branch and the mesh
+    cannot deadlock.  ``chunk_collectives=False`` keeps the legacy layout
+    (gradient computed and all-reduced every step, application masked with
+    ``where``) — the two are bit-exact-trajectory equivalent at equal
+    global batch (tests/test_dp_trainer.py) since the per-step PRNG splits
+    are consumed identically and the kept values come from identical ops.
 
     With ``axis=None``, 1 lane, and the same route, the trajectory
     reproduces :func:`_train_run` (the DP parity contract in
@@ -369,49 +378,79 @@ def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
             ts.replay, svs, actions, rewards, nsvs,
             done.astype(jnp.float32), task.valid)
 
-        batches = jax.vmap(
-            lambda b, k: device_replay_sample(b, k, cfg.batch_size)
-        )(replay, lane_keys(k_smp))
-        losses, grads = jax.vmap(
-            lambda b: dqn_td_grads(ts.eval_p, ts.targ_p, b, gamma=cfg.gamma)
-        )(batches)
-        # ONE collective per scan step: per-step all-reduce barriers
-        # dominate the sharded step cost on oversubscribed hosts, so the
-        # update-gate counters ride the gradient pmean as f32
-        # (pre-scaled by n_shards: pmean(x * n) == psum(x), exact in f32
-        # for these small integers)
-        stats = jnp.stack([
-            task.valid.astype(jnp.float32).sum(),
-            (replay.size.min() >= cfg.min_replay).astype(jnp.float32),
-        ]) * float(n_shards)
-        flat, unravel = jax.flatten_util.ravel_pytree(
-            (stats, losses.mean(),
-             jax.tree_util.tree_map(lambda g: g.mean(0), grads)))
-        stats, loss, grads = unravel(pmean(flat))
-        env_steps = ts.env_steps + stats[0].astype(jnp.int32)
+        def td_batch():
+            batches = jax.vmap(
+                lambda b, k: device_replay_sample(b, k, cfg.batch_size)
+            )(replay, lane_keys(k_smp))
+            return jax.vmap(
+                lambda b: dqn_td_grads(ts.eval_p, ts.targ_p, b,
+                                       gamma=cfg.gamma))(batches)
+
         # cadence = update_every-boundary CROSSING, not an exact-multiple
         # check: env_steps advances by the global valid-lane count per
         # scan step, so `env_steps % update_every == 0` would alias
         # (e.g. 4 lanes with update_every=3 lands on a multiple only
         # every third step — a 6x silent under-training).  For one lane
         # the crossing test reduces exactly to the single-lane modulo.
-        crossed = (env_steps // cfg.update_every
-                   > ts.env_steps // cfg.update_every)
-        do_update = crossed & (stats[1] == float(n_shards))
-        new_p, new_opt = adam_apply(ts.eval_p, ts.opt, grads, lr=cfg.lr)
+        if chunk_collectives:
+            # only the 2-float gate stats all-reduce every step; the
+            # gradient collective + Adam step wait for an optimizer step.
+            # The cond predicate is shard-uniform (pure function of the
+            # psum'd globals), so the conditional pmean cannot deadlock.
+            stats = psum(jnp.stack([
+                task.valid.astype(jnp.float32).sum(),
+                (replay.size.min() >= cfg.min_replay).astype(jnp.float32),
+            ]))
+            env_steps = ts.env_steps + stats[0].astype(jnp.int32)
+            crossed = (env_steps // cfg.update_every
+                       > ts.env_steps // cfg.update_every)
+            do_update = crossed & (stats[1] == float(n_shards))
+
+            def upd(_):
+                losses, grads = td_batch()
+                flat, unravel = jax.flatten_util.ravel_pytree(
+                    (losses.mean(),
+                     jax.tree_util.tree_map(lambda g: g.mean(0), grads)))
+                gloss, g = unravel(pmean(flat))
+                new_p, new_opt = adam_apply(ts.eval_p, ts.opt, g, lr=cfg.lr)
+                return new_p, new_opt, gloss
+
+            def skip(_):
+                return ts.eval_p, ts.opt, jnp.float32(0.0)
+
+            eval_p, opt, loss = jax.lax.cond(do_update, upd, skip, None)
+        else:
+            # legacy layout: ONE collective per scan step — the update-gate
+            # counters ride the gradient pmean as f32 (pre-scaled by
+            # n_shards: pmean(x * n) == psum(x), exact in f32 for these
+            # small integers) and the application is where-masked
+            losses, grads = td_batch()
+            stats = jnp.stack([
+                task.valid.astype(jnp.float32).sum(),
+                (replay.size.min() >= cfg.min_replay).astype(jnp.float32),
+            ]) * float(n_shards)
+            flat, unravel = jax.flatten_util.ravel_pytree(
+                (stats, losses.mean(),
+                 jax.tree_util.tree_map(lambda g: g.mean(0), grads)))
+            stats, loss, grads = unravel(pmean(flat))
+            env_steps = ts.env_steps + stats[0].astype(jnp.int32)
+            crossed = (env_steps // cfg.update_every
+                       > ts.env_steps // cfg.update_every)
+            do_update = crossed & (stats[1] == float(n_shards))
+            new_p, new_opt = adam_apply(ts.eval_p, ts.opt, grads, lr=cfg.lr)
+            keep = lambda n, o: jnp.where(do_update, n, o)  # noqa: E731
+            eval_p = jax.tree_util.tree_map(keep, new_p, ts.eval_p)
+            opt = jax.tree_util.tree_map(keep, new_opt, ts.opt)
+            loss = jnp.where(do_update, loss, 0.0)
 
         updates = ts.updates + do_update.astype(jnp.int32)
         sync = do_update & (updates % cfg.target_sync_every == 0)
-        keep = lambda n, o: jnp.where(do_update, n, o)  # noqa: E731
-        eval_p = jax.tree_util.tree_map(keep, new_p, ts.eval_p)
-        opt = jax.tree_util.tree_map(keep, new_opt, ts.opt)
         targ_p = jax.tree_util.tree_map(
             lambda e, t: jnp.where(sync, e, t), eval_p, ts.targ_p)
         ts2 = TrainState(eval_p=eval_p, targ_p=targ_p, opt=opt,
                          replay=replay, env_steps=env_steps,
                          updates=updates, key=key)
-        return (ts2, plats2, nsvs), (recs, jnp.where(do_update, loss, 0.0),
-                                     do_update)
+        return (ts2, plats2, nsvs), (recs, loss, do_update)
 
     def run(ts: TrainState, tasks: TaskArrays):
         # global lane ids: shard i owns contiguous lanes [i*lanes, ...)
@@ -446,7 +485,7 @@ def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
 
 
 def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
-                     axis: str = "routes"):
+                     axis: str = "routes", chunk_collectives: bool = True):
     """Compile the data-parallel fused trainer.
 
     Returns ``fn(train_state, tasks) -> (train_state, platform_states,
@@ -460,10 +499,13 @@ def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
     (``lanes`` must be a multiple of the mesh size): each device runs its
     local routes and the per-step gradient all-reduce keeps every shard on
     one synchronized agent — the scale-out recipe of MaxText-style JAX
-    trainers, on the platform substrate.
+    trainers, on the platform substrate — and with the default
+    ``chunk_collectives=True`` the gradient all-reduce fires once per
+    optimizer step instead of every scan step (see ``_dp_train_run``).
     """
     if mesh is None:
-        return jax.jit(_dp_train_run(spec, cfg, lanes))
+        return jax.jit(_dp_train_run(spec, cfg, lanes,
+                                     chunk_collectives=chunk_collectives))
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
@@ -472,7 +514,8 @@ def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
         raise ValueError(f"lanes={lanes} must be a positive multiple of "
                          f"the mesh size {mesh.size}")
     run = _dp_train_run(spec, cfg, lanes // mesh.size, axis=axis,
-                        n_shards=mesh.size)
+                        n_shards=mesh.size,
+                        chunk_collectives=chunk_collectives)
     ts_specs = TrainState(eval_p=P(), targ_p=P(), opt=P(), replay=P(axis),
                           env_steps=P(), updates=P(), key=P())
     sharded = shard_map(run, mesh=mesh, in_specs=(ts_specs, P(axis)),

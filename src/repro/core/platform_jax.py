@@ -235,6 +235,43 @@ def state_vector(spec: PlatformSpec, feat_table: jax.Array,
     return jnp.concatenate([tf, hw.reshape(-1)])
 
 
+def stage_state_vector(spec: PlatformSpec, feat_table: jax.Array,
+                       backlog_scale, state: PlatformState, task: TaskArrays,
+                       *, stage_exec: jax.Array, mac_frac: jax.Array,
+                       group_mask: jax.Array,
+                       stage_frac: jax.Array) -> jax.Array:
+    """FlexAI observation for one pipeline-stage sub-task (``4 + 6n``).
+
+    Unlike :func:`state_vector` this observation is *group-local and
+    order-independent*: every per-accelerator feature is masked to the
+    stage's accelerator group, and normalization is static
+    (``gvalue_e_scale`` / per-accelerator task counts) instead of the
+    running ``e_scale`` — the running scale is a *global* reduction whose
+    value depends on how far other stage groups have progressed, which
+    would break the bit-exact parity between the flattened single-device
+    wavefront and the stage-sharded engine (core/pipeline.py).
+
+    Task-Info scales by the stage's MAC fraction (a stage sub-task is that
+    slice of the model) and appends the stage position; HW-Info gains the
+    group-membership flag so the Q-net can tell its action support apart
+    from a merely-idle accelerator.
+    """
+    mask = group_mask.astype(jnp.float32)
+    tf = jnp.concatenate([
+        feat_table[task.kind] * mac_frac,
+        jnp.asarray(task.safety, jnp.float32)[None],
+        jnp.asarray(stage_frac, jnp.float32)[None]])
+    nt = jnp.maximum(state.num_tasks.astype(jnp.float32), 1.0)
+    e_norm = state.E / (jnp.maximum(spec.gvalue_e_scale, 1e-12) * nt)
+    backlog = jnp.log1p(
+        jnp.maximum(state.avail - task.arrival, 0.0) / backlog_scale)
+    ms_norm = state.MS / nt
+    ex = stage_exec[:, task.kind] / jnp.maximum(spec.gvalue_t_scale, 1e-12)
+    per = jnp.stack([e_norm, backlog, state.R_Balance, ms_norm, ex, mask],
+                    axis=1) * mask[:, None]
+    return jnp.concatenate([tf, per.reshape(-1)])
+
+
 def summarize(spec: PlatformSpec, state: PlatformState,
               recs: StepRecord) -> dict:
     """Host-side summary matching ``HMAIPlatform.summary`` keys."""

@@ -59,7 +59,7 @@ def ata_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
 
 
 def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
-                window: int = 30, alive=None):
+                window: int = 30, alive=None, incremental: bool = True):
     """Windowed Min-Min as a nested scan.
 
     Outer scan walks windows of ``window`` tasks; the inner scan commits
@@ -67,29 +67,62 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
     completion time among unscheduled window rows, row-major tie-break like
     the NumPy loop.  Padding rows start pre-scheduled, and an all-scheduled
     window step degenerates to a masked no-op ``platform_step``.
+
+    ``incremental=True`` (default) carries the ``[W, n]`` completion-time
+    matrix through the inner scan instead of rebuilding it every step:
+    committing ``(ti, a)`` only moves ``state.avail[a]``, so the update is
+    row ``ti`` -> inf plus a recompute of column ``a`` — O(W + n) touched
+    entries per step instead of O(W*n).  Each surviving entry is produced
+    by the same elementwise ``max(arrival, avail) + exec`` expression, so
+    the flat argmin (and its row-major tie-break) is bit-identical to the
+    rebuild path; ``incremental=False`` keeps the rebuild as the parity
+    oracle.
     """
     n = spec.n
     win = window_task_arrays(tasks, window)
     mask = jnp.ones((n,), bool) if alive is None else alive
 
-    def inner(wtasks, carry, _):
-        state, scheduled = carry
+    def ct_full(wtasks, state, scheduled):
         ct = (jnp.maximum(wtasks.arrival[:, None], state.avail[None, :])
               + spec.exec_time.T[wtasks.kind])            # [W, n]
         ct = jnp.where(mask[None, :], ct, jnp.inf)
-        ct = jnp.where(scheduled[:, None], jnp.inf, ct)
+        return jnp.where(scheduled[:, None], jnp.inf, ct)
+
+    def commit(wtasks, state, scheduled, ct):
         flat = jnp.argmin(ct)
         ti, a = flat // n, flat % n
         ok = ~scheduled[ti]                               # False if all done
         task_i = jax.tree_util.tree_map(lambda x: x[ti], wtasks)
         state2, rec = platform_step(spec, state, task_i,
                                     a.astype(jnp.int32), valid=ok)
-        return (state2, scheduled.at[ti].set(True)), rec
+        return state2, scheduled.at[ti].set(True), ti, a, rec
+
+    def inner(wtasks, carry, _):
+        state, scheduled = carry
+        ct = ct_full(wtasks, state, scheduled)
+        state2, scheduled2, _, _, rec = commit(wtasks, state, scheduled, ct)
+        return (state2, scheduled2), rec
+
+    def inner_inc(wtasks, carry, _):
+        state, scheduled, ct = carry
+        state2, scheduled2, ti, a, rec = commit(wtasks, state, scheduled, ct)
+        col = (jnp.maximum(wtasks.arrival, state2.avail[a])
+               + spec.exec_time[a, wtasks.kind])          # [W]
+        col = jnp.where(mask[a] & ~scheduled2, col, jnp.inf)
+        ct2 = ct.at[ti, :].set(jnp.inf).at[:, a].set(col)
+        return (state2, scheduled2, ct2), rec
 
     def outer(state, wtasks):
-        (state, _), recs = jax.lax.scan(
-            functools.partial(inner, wtasks), (state, ~wtasks.valid),
-            None, length=window)
+        sched0 = ~wtasks.valid
+        if incremental:
+            (state, _, _), recs = jax.lax.scan(
+                functools.partial(inner_inc, wtasks),
+                (state, sched0, ct_full(wtasks, state, sched0)),
+                None, length=window)
+        else:
+            (state, _), recs = jax.lax.scan(
+                functools.partial(inner, wtasks), (state, sched0),
+                None, length=window)
         return state, recs
 
     init = platform_init(n) if state0 is None else state0

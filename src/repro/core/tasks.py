@@ -198,6 +198,94 @@ def invalid_task_arrays(length: int) -> TaskArrays:
     )
 
 
+# ---------------------------------------------------------------------------
+# pipeline-stage DAG form (one route -> chunk tasks -> pipeline stages)
+# ---------------------------------------------------------------------------
+
+class StageGraph(NamedTuple):
+    """A route compiled to a pipeline DAG: every chunk task of ``tasks``
+    flows through ``n_stages`` stages (stage s of task k depends on stage
+    s-1 of task k — the camera->perception->planning chain cut into
+    MAC-balanced layer windows).
+
+    Static per-kind metadata (NumPy, not scanned over):
+
+    * ``layer_splits`` [n_kinds, S+1]: layer index boundaries — stage s of
+      kind ``k`` runs layers ``splits[k, s]:splits[k, s+1]``;
+    * ``mac_frac``     [n_kinds, S]: MAC fraction per stage (rows sum to 1);
+    * ``act_bytes``    [n_kinds, S]: activation bytes crossing the boundary
+      AFTER stage s (the cross-stage reshard payload; last column is the
+      network output, which stays on the final group -> 0).
+
+    ``edges_src``/``edges_dst`` ([S-1] each) spell out the producer ->
+    consumer stage edges; the chain DAG makes them ``s -> s+1``, but the
+    fields keep the representation honest for future branching graphs.
+    """
+    tasks: TaskArrays
+    n_stages: int
+    layer_splits: "object"   # [n_kinds, S+1] i32
+    mac_frac: "object"       # [n_kinds, S] f32
+    act_bytes: "object"      # [n_kinds, S] f32
+    edges_src: "object"      # [S-1] i32
+    edges_dst: "object"      # [S-1] i32
+
+
+@lru_cache(maxsize=8)
+def stage_layer_stats(n_stages: int):
+    """MAC-balanced layer windows for every perception model (Table 1).
+
+    Returns ``(layer_splits [n_kinds, S+1], mac_frac [n_kinds, S],
+    act_bytes [n_kinds, S])`` in KIND_INDEX order.  Splits are chosen
+    greedily so each stage's MAC share approaches 1/S — the same
+    equal-FLOPs stage construction alpa's inter-op pass starts from.
+    Activation bytes at a boundary = the boundary layer's output tensor
+    (c_out x (hw/stride)^2 fp32 for conv, c_out fp32 for fc).
+    """
+    import numpy as np
+    stats = _model_stats()
+    splits = np.zeros((len(KIND_ORDER), n_stages + 1), np.int32)
+    frac = np.zeros((len(KIND_ORDER), n_stages), np.float32)
+    act = np.zeros((len(KIND_ORDER), n_stages), np.float32)
+    for ki, kind in enumerate(KIND_ORDER):
+        per_layer = stats[kind.value]["per_layer"]
+        macs = np.asarray([l["macs"] for l in per_layer], np.float64)
+        csum = np.concatenate([[0.0], np.cumsum(macs)])
+        total = csum[-1]
+        bounds = [0]
+        for s in range(1, n_stages):
+            target = total * s / n_stages
+            # first layer boundary at/after the equal-MACs target, but at
+            # least one layer per stage so every stage exists
+            b = int(np.searchsorted(csum, target))
+            b = min(max(b, bounds[-1] + 1), len(per_layer) - (n_stages - s))
+            bounds.append(b)
+        bounds.append(len(per_layer))
+        splits[ki] = np.asarray(bounds, np.int32)
+        for s in range(n_stages):
+            lo, hi = bounds[s], bounds[s + 1]
+            frac[ki, s] = (csum[hi] - csum[lo]) / total
+            if s < n_stages - 1:
+                out = per_layer[hi - 1]
+                hw = out.get("hw", 1) // max(out.get("stride", 1), 1)
+                act[ki, s] = 4.0 * out["c_out"] * max(hw, 1) ** 2
+    return splits, frac, act
+
+
+def route_to_stage_graph(tasks, n_stages: int) -> StageGraph:
+    """Compile one route (a ``Task`` list or ``TaskArrays``) into its
+    pipeline DAG for ``n_stages`` stages.  ``n_stages == 1`` degenerates to
+    the whole-task representation (one stage owning every layer)."""
+    import numpy as np
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    ta = tasks if isinstance(tasks, TaskArrays) else tasks_to_arrays(tasks)
+    splits, frac, act = stage_layer_stats(n_stages)
+    s = np.arange(n_stages - 1, dtype=np.int32)
+    return StageGraph(tasks=ta, n_stages=n_stages, layer_splits=splits,
+                      mac_frac=frac, act_bytes=act,
+                      edges_src=s, edges_dst=s + 1)
+
+
 def pad_route_batch(batch: TaskArrays, multiple: int) -> TaskArrays:
     """Pad the leading route axis of a [R, T] batch to a multiple of
     ``multiple`` with all-invalid routes.

@@ -22,6 +22,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_platform_mesh(n_stages: int = 1, devices: int | None = None):
+    """Mesh for the device-resident platform engines: 1-D ``("routes",)``
+    for pure data parallelism over route lanes, 2-D ``("stages",
+    "routes")`` when pipeline stages are placed on accelerator groups
+    (``core/pipeline.py``).  The stage axis size must equal the
+    ``StagePlan``'s stage count; the route axis takes the remaining
+    devices.
+    """
+    n_dev = devices if devices is not None else len(jax.devices())
+    if n_stages <= 1:
+        return make_mesh((n_dev,), ("routes",))
+    if n_dev % n_stages:
+        raise RuntimeError(
+            f"{n_dev} device(s) not divisible into {n_stages} stage "
+            f"groups; force a device count with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=<k*{n_stages}>")
+    return make_mesh((n_stages, n_dev // n_stages), ("stages", "routes"))
+
+
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many host devices exist (tests)."""
     import numpy as np

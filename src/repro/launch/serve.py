@@ -95,14 +95,30 @@ def run_qos_placement_serving(args) -> int:
     if args.shard and not durable:
         print("note: plain QoS placement serving is single-device "
               "(--shard needs a durability flag, e.g. --resume)")
+    if args.stages > 1 and durable:
+        print("--stages > 1 is incompatible with durability flags "
+              "(pipeline waves checkpoint (state, ring); the snapshot "
+              "format and fault-masked executors are single-stage)")
+        return 1
     plat = HMAIPlatform(capacity_scale=args.rate_scale)
-    agent = FlexAIAgent(plat, FlexAIConfig(seed=args.seed))
-    if args.weights:
-        agent.load_weights(args.weights)
+    if args.stages > 1:
+        # stage-level placement needs stage-shaped Q params
+        from repro.core.pipeline import PipelineFlexAI
+        pipe = PipelineFlexAI(plat, FlexAIConfig(seed=args.seed),
+                              n_stages=args.stages)
+        if args.weights:
+            pipe.load_weights(args.weights)
+        params, backlog_scale = pipe.eval_params(), pipe.cfg.backlog_scale
+    else:
+        agent = FlexAIAgent(plat, FlexAIConfig(seed=args.seed))
+        if args.weights:
+            agent.load_weights(args.weights)
+        params, backlog_scale = agent.learner.eval_p, agent.cfg.backlog_scale
     cfg = QoSConfig(policy=args.qos or "fifo",
                     deadline_scale=args.deadline_scale
                     if args.deadline_scale is not None else 1.0,
-                    slots=args.slots, min_bucket=args.min_bucket)
+                    slots=args.slots, min_bucket=args.min_bucket,
+                    stages=args.stages)
 
     if durable:
         from repro.serve.durability import (DurableQoSEngine,
@@ -118,7 +134,7 @@ def run_qos_placement_serving(args) -> int:
         if args.resume:
             eng = DurableQoSEngine.restore(
                 args.snapshot_dir, plat,
-                backlog_scale=agent.cfg.backlog_scale, mesh=mesh,
+                backlog_scale=backlog_scale, mesh=mesh,
                 guard=guard, snapshot_every=args.snapshot_every or None,
                 trace=args.trace, segment_sleep=args.segment_sleep)
             print(f"resumed snapshot: now={eng.now:.4f} "
@@ -132,15 +148,15 @@ def run_qos_placement_serving(args) -> int:
                     factor=args.inject_factor,
                     handled=not args.no_degrade))
             eng = DurableQoSEngine(
-                plat, agent.learner.eval_p, cfg,
-                backlog_scale=agent.cfg.backlog_scale,
+                plat, params, cfg,
+                backlog_scale=backlog_scale,
                 snapshot_dir=args.snapshot_dir,
                 snapshot_every=args.snapshot_every, faults=faults,
                 mesh=mesh, guard=guard, trace=args.trace,
                 segment_sleep=args.segment_sleep)
     else:
-        eng = QoSPlacementEngine(plat, agent.learner.eval_p, cfg,
-                                 backlog_scale=agent.cfg.backlog_scale)
+        eng = QoSPlacementEngine(plat, params, cfg,
+                                 backlog_scale=backlog_scale)
 
     if not args.resume:
         gap = args.arrival_gap if args.arrival_gap is not None else 0.05
@@ -248,6 +264,10 @@ def main(argv=None) -> int:
     ap.add_argument("--route-km", type=float, default=0.03)
     ap.add_argument("--rate-scale", type=float, default=0.05)
     ap.add_argument("--min-bucket", type=int, default=64)
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages per wave (>1 serves stage-level "
+                         "placements via core.pipeline; QoS mode only, "
+                         "incompatible with durability flags)")
     ap.add_argument("--weights", type=str, default=None,
                     help="npz of trained EvalNet weights")
     ap.add_argument("--seed", type=int, default=0)
@@ -287,7 +307,8 @@ def main(argv=None) -> int:
         # value) routes to the deadline-aware wave engine; the plain
         # batch service has no timeline for them to act on
         if (args.qos is not None or args.arrival_gap is not None
-                or args.deadline_scale is not None or _durable_mode(args)):
+                or args.deadline_scale is not None or args.stages > 1
+                or _durable_mode(args)):
             return run_qos_placement_serving(args)
         return run_placement_serving(args)
     if args.arch is None:

@@ -415,6 +415,11 @@ class DurableQoSEngine(QoSPlacementEngine):
                  trace: bool = False,
                  segment_sleep: float = 0.0,
                  keep: int = 3):
+        if cfg.stages > 1:
+            raise ValueError(
+                "durability does not support pipeline waves (stages > 1): "
+                "snapshots and fault-masked executors cover the lockstep "
+                "(state)-only checkpoint, not (state, ring)")
         super().__init__(platform, params, cfg,
                          backlog_scale=backlog_scale, executor=executor)
         self._stub = executor is not None

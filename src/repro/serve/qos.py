@@ -32,6 +32,18 @@ engine (``flexai.engine._schedule_run`` with ``state0`` resume), so
 ``stm_rate`` at the serving boundary is measured on actual schedules, not
 a queueing abstraction.  A ``stub`` executor swaps the device dispatch for
 a state pass-through when only the queueing discipline is under test.
+
+With ``cfg.stages > 1`` a wave serves *pipeline* placements
+(``core.pipeline``): each lane's route is flattened into the wavefront
+stream at admission, service segments are micro-batches of flat
+(task, stage) steps, and the preemption checkpoint widens to ``(state,
+ring)`` — the ring of per-stage upstream finish times is exactly what a
+resumed wave needs to keep charging cross-stage handoffs.  The virtual
+clock charges ``svc/stages`` per flat slot, so a pipelined wave costs
+the same service time as its unpipelined twin up to the (S-1)-column
+drain bubble.  Params must come from a stage-level agent
+(``PipelineFlexAI``); the durability layer does not support pipeline
+waves (gated off in ``launch/serve.py`` and ``DurableQoSEngine``).
 """
 from __future__ import annotations
 
@@ -92,6 +104,23 @@ def _segment_fn(spec, backlog_scale: float):
     return _SEG_FN_CACHE[key]
 
 
+def _pipeline_segment_fn(spec, plan, backlog_scale: float):
+    """Jitted vmapped pipeline segment (``core.pipeline``): lanes share
+    the flat stage sequence, each carries its own (state, ring)
+    checkpoint.  Cached like :func:`_segment_fn`, with the stage plan in
+    the key."""
+    key = (np.asarray(spec.exec_time).tobytes(),
+           np.asarray(plan.stage_exec).tobytes(),
+           np.asarray(plan.groups).tobytes(), float(backlog_scale))
+    if key not in _SEG_FN_CACHE:
+        from repro.core.pipeline import _pipeline_segment_run
+        run = _pipeline_segment_run(spec, plan, backlog_scale,
+                                    policy="flexai")
+        _SEG_FN_CACHE[key] = jax.jit(
+            jax.vmap(run, in_axes=(None, 0, None, 0, 0)))
+    return _SEG_FN_CACHE[key]
+
+
 @dataclasses.dataclass(frozen=True)
 class QoSConfig:
     """Knobs of the deadline-aware serving layer.
@@ -113,12 +142,15 @@ class QoSConfig:
                                      # (None: half the mean Table-5 period)
     min_bucket: int = 16             # power of two, >= chunk
     max_preemptions: int = 4         # per wave (livelock guard)
+    stages: int = 1                  # >1: pipeline waves (core.pipeline)
 
     def __post_init__(self):
         if self.policy not in ("edf", "fifo"):
             raise ValueError(f"unknown policy {self.policy!r}")
         if self.min_bucket % self.chunk:
             raise ValueError("min_bucket must be a multiple of chunk")
+        if self.stages < 1:
+            raise ValueError("stages must be >= 1")
 
 
 @dataclasses.dataclass
@@ -145,15 +177,23 @@ class RouteRequest:
 
 @dataclasses.dataclass
 class Wave:
-    """An admitted (and possibly checkpointed) lockstep wave."""
+    """An admitted (and possibly checkpointed) lockstep wave.
+
+    Pipeline waves (``cfg.stages > 1``) carry the flat wavefront stream
+    in ``batch`` ([slots, flat_len]) plus the shared stage sequence and
+    the per-lane ring of upstream finish times — ``(state, ring)`` is the
+    preemption checkpoint there."""
     requests: list           # lane-aligned RouteRequests (may be < slots)
-    batch: TaskArrays        # [slots, bucket]
+    batch: TaskArrays        # [slots, bucket] (or [slots, flat_len])
     state: PlatformState     # [slots, ...] — THE preemption checkpoint
     bucket: int
     progress: int = 0        # lockstep task slots already served
     preemptions: int = 0
     waves_waited: int = 0
     recs: list = dataclasses.field(default_factory=list)
+    s_seq: Optional[np.ndarray] = None   # [flat_len] stage per flat slot
+    ring: Optional[jax.Array] = None     # [slots, S] checkpoint half 2
+    flat_len: Optional[int] = None       # padded wavefront length
 
     def min_deadline(self, aging_credit: float) -> float:
         return min(effective_deadline(r.deadline, self.waves_waited,
@@ -201,7 +241,21 @@ class QoSPlacementEngine:
         self.backlog_scale = backlog_scale
         self.svc = (cfg.svc_per_task if cfg.svc_per_task is not None
                     else 0.5 * float(kind_period_table().mean()))
-        if executor == "stub":
+        # a flat pipeline slot is one (task, stage) micro-step: charge
+        # svc/stages so a wave's total service matches its unpipelined
+        # twin up to the (S-1)-column drain bubble
+        self.svc_step = self.svc / cfg.stages
+        self.plan = None
+        if cfg.stages > 1:
+            if executor is not None:
+                raise ValueError(
+                    "pipeline waves (stages > 1) require the device scan "
+                    "executor; stub/custom executors are single-stage")
+            from repro.core.pipeline import build_stage_plan
+            self.plan = build_stage_plan(platform, cfg.stages)
+            self._seg_fn = _pipeline_segment_fn(self.spec, self.plan,
+                                                backlog_scale)
+        elif executor == "stub":
             self._seg_fn = _stub_executor(self.spec)
         elif executor is not None:
             self._seg_fn = executor
@@ -226,6 +280,20 @@ class QoSPlacementEngine:
     def _bucket(self, n: int) -> int:
         return power_of_two_bucket(n, max(self.cfg.min_bucket,
                                           self.cfg.chunk))
+
+    def _flat_len(self, bucket: int) -> int:
+        """Wavefront stream length for a bucket, padded to a chunk
+        multiple (segment cuts stay aligned)."""
+        L = (bucket + self.cfg.stages - 1) * self.cfg.stages
+        return L + (-L) % self.cfg.chunk
+
+    def _service_need(self, bucket: int) -> float:
+        """Virtual service time a bucket will be charged end to end —
+        what shedding and preemption decisions compare against deadlines
+        (identical to ``bucket * svc`` when stages == 1)."""
+        if self.cfg.stages > 1:
+            return self._flat_len(bucket) * self.svc_step
+        return bucket * self.svc
 
     def submit(self, tasks, arrival: float = 0.0,
                deadline: Optional[float] = None) -> RouteRequest:
@@ -268,7 +336,7 @@ class QoSPlacementEngine:
         only burn a wave that a feasible request could use)."""
         keep = []
         for r in self.backlog:
-            if self.now + r.bucket * self.svc > r.deadline:
+            if self.now + self._service_need(r.bucket) > r.deadline:
                 r.status = SHED
                 r.finish = self.now
                 r.slack = r.deadline - self.now
@@ -276,7 +344,7 @@ class QoSPlacementEngine:
                     "uid": r.uid, "n_tasks": r.n_tasks,
                     "deadline": r.deadline, "shed_at": self.now,
                     "reason": "infeasible",
-                    "needed_s": r.bucket * self.svc,
+                    "needed_s": self._service_need(r.bucket),
                     "had_s": r.deadline - self.now})
             else:
                 keep.append(r)
@@ -307,12 +375,38 @@ class QoSPlacementEngine:
         state = stack_states(
             [platform_init(self.spec.n) for _ in range(self.cfg.slots)])
         self.wave_log.append([r.uid for r in wave_reqs])
+        s_seq = ring = flat_len = None
+        if self.plan is not None:
+            batch, s_seq, flat_len = self._flatten_batch(batch, head.bucket)
+            import jax.numpy as jnp
+            ring = jnp.zeros((self.cfg.slots, self.cfg.stages), jnp.float32)
         # the wave inherits its members' earned aging credit, so a
         # long-aged request that gets preempted right after admission does
         # not restart its anti-starvation clock from zero
         return Wave(requests=wave_reqs, batch=batch, state=state,
                     bucket=head.bucket,
-                    waves_waited=max(r.waves_waited for r in wave_reqs))
+                    waves_waited=max(r.waves_waited for r in wave_reqs),
+                    s_seq=s_seq, ring=ring, flat_len=flat_len)
+
+    def _flatten_batch(self, batch: TaskArrays, bucket: int):
+        """[slots, bucket] lockstep batch -> [slots, flat_len] wavefront
+        stream (``core.pipeline._wavefront_stream`` per lane; the stage
+        sequence depends only on (bucket, stages), so lanes share it),
+        right-padded with invalid rows to a chunk multiple."""
+        from repro.core.pipeline import _wavefront_stream
+        S = self.cfg.stages
+        flat_len = self._flat_len(bucket)
+        lanes, s_seq = [], None
+        for lane in range(batch.arrival.shape[0]):
+            rows, ss = _wavefront_stream(
+                jax.tree_util.tree_map(lambda a: a[lane], batch), S)
+            rows = jax.tree_util.tree_map(np.asarray, rows)
+            lanes.append(pad_task_arrays(rows, flat_len))
+            s_seq = ss
+        s_seq = np.concatenate(
+            [np.asarray(s_seq),
+             np.zeros(flat_len - s_seq.shape[0], s_seq.dtype)])
+        return stack_task_arrays(lanes), s_seq, flat_len
 
     def _next_wave(self) -> Optional[Wave]:
         while True:
@@ -373,7 +467,8 @@ class QoSPlacementEngine:
         # shed at the next admission) is not worth a checkpoint
         waiters = [self._eff_deadline(r) for r in self.backlog
                    if not (self.cfg.shed
-                           and self.now + r.bucket * self.svc > r.deadline)]
+                           and self.now + self._service_need(r.bucket)
+                           > r.deadline)]
         waiters += [w.min_deadline(self.cfg.aging_credit)
                     for w in self.preempted]
         if not waiters:
@@ -391,8 +486,10 @@ class QoSPlacementEngine:
 
     def _charge_segment(self, wave: Wave, recs) -> None:
         """Advance the virtual clock for one served segment (the
-        durability layer charges degraded-core overruns here)."""
-        self.now += self.cfg.chunk * self.svc
+        durability layer charges degraded-core overruns here).  Pipeline
+        segments are chunks of flat (task, stage) micro-steps charged at
+        ``svc/stages`` each — identical to ``chunk * svc`` at one stage."""
+        self.now += self.cfg.chunk * self.svc_step
 
     def _after_segment(self, wave: Wave) -> None:
         """Segment-boundary hook: fault firing, heartbeats, snapshot
@@ -406,11 +503,18 @@ class QoSPlacementEngine:
 
     def _run_wave(self, wave: Wave) -> None:
         chunk = self.cfg.chunk
-        while wave.progress < wave.bucket:
+        total = wave.flat_len if wave.flat_len is not None else wave.bucket
+        while wave.progress < total:
             p = wave.progress
             seg = jax.tree_util.tree_map(
                 lambda a: a[:, p: p + chunk], wave.batch)
-            state, recs = self._dispatch_segment(wave, seg)
+            if self.plan is not None:
+                state, ring, recs = self._seg_fn(
+                    self.params, seg, wave.s_seq[p: p + chunk],
+                    wave.state, wave.ring)
+                wave.ring = ring
+            else:
+                state, recs = self._dispatch_segment(wave, seg)
             self.dispatches += 1
             wave.state = state
             wave.recs.append(recs)
@@ -420,7 +524,7 @@ class QoSPlacementEngine:
             self._after_segment(wave)
             if self._halt:
                 return  # durability stop: the wave was snapshotted in-flight
-            if wave.progress < wave.bucket and self._should_preempt(wave):
+            if wave.progress < total and self._should_preempt(wave):
                 wave.preemptions += 1
                 self.preemption_count += 1
                 for r in wave.requests:
@@ -432,11 +536,26 @@ class QoSPlacementEngine:
             lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=1),
             *wave.recs)
         final = jax.device_get(wave.state)
+        order = None
+        if self.plan is not None:
+            from repro.core.pipeline import _record_order
+            order = np.asarray(_record_order(wave.bucket, self.cfg.stages))
         for lane, req in enumerate(wave.requests):
             lane_final = jax.tree_util.tree_map(lambda a: a[lane], final)
             lane_recs = jax.tree_util.tree_map(lambda a: a[lane], recs)
-            summ = summarize(self.spec, lane_final, lane_recs)
-            summ["placements"] = np.asarray(lane_recs.action)[: req.n_tasks]
+            if order is not None:
+                # flat wavefront records -> task-major [bucket, S];
+                # end-to-end verdicts come from the final stage
+                from repro.core.pipeline import pipeline_summarize
+                lane_recs = jax.tree_util.tree_map(
+                    lambda a: a[order], lane_recs)
+                summ = pipeline_summarize(self.spec, lane_final, lane_recs)
+                summ["placements"] = np.asarray(
+                    lane_recs.action)[: req.n_tasks]       # [n_tasks, S]
+            else:
+                summ = summarize(self.spec, lane_final, lane_recs)
+                summ["placements"] = np.asarray(
+                    lane_recs.action)[: req.n_tasks]
             summ["bucket"] = wave.bucket
             req.summary = summ
             req.status = COMPLETED

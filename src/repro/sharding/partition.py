@@ -114,6 +114,20 @@ DEFAULT_RULES: AxisRules = (
     ("unsharded", None),
 )
 
+# Platform-simulation logical axes (the device-resident scheduler /
+# serving engines, ``core/pipeline.py``).  The scan engines historically
+# hard-coded a 1-D ``("routes",)`` mesh; pipeline parallelism generalizes
+# it to 2-D — stage groups along "stages" (inter-op, alpa-style), route
+# lanes along "routes" (data parallel).  Per-accelerator state rows and
+# scheduler task windows stay replicated within a stage group.
+PLATFORM_RULES: AxisRules = (
+    ("routes", "routes"),    # independent route lanes (data parallel)
+    ("stages", "stages"),    # pipeline stage groups (inter-op parallel)
+    ("accel", None),         # per-accelerator state rows
+    ("window", None),        # scheduler task windows
+    ("tasks", None),         # per-task queue rows
+)
+
 # Decode-time rules (§Perf, decode cells).  The training layout FSDP-shards
 # weights along the *contraction* (embed) dim over "data", which at decode
 # forces an fp32 weight all-gather per matmul per token (84 MB/matmul for

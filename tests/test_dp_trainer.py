@@ -29,7 +29,8 @@ from repro.core.flexai import (FlexAIAgent, FlexAIConfig, ScanFlexAI,
                                make_train_fn, train_init)
 from repro.core.hmai import HMAIPlatform
 from repro.core.platform_jax import spec_from_platform
-from repro.core.tasks import TaskArrays, tasks_to_arrays
+from repro.core.tasks import (TaskArrays, stack_task_arrays,
+                              tasks_to_arrays)
 
 RS = 0.05
 
@@ -133,6 +134,37 @@ def test_dp_one_shard_matches_unsharded_fused_trainer():
     np.testing.assert_allclose(np.asarray(loss_s), np.asarray(loss_d),
                                atol=1e-4)
     for a, b in zip(ts_s.eval_p, ts_d.eval_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4)
+
+
+def test_dp_chunked_collectives_match_legacy_trajectory():
+    """``chunk_collectives=True`` (one 2-float stats psum per step; grads
+    + pmean + adam only inside the update-step cond) must walk the same
+    trajectory as the legacy every-step-pmean path at equal global batch:
+    identical actions and update cadence, losses/params to fp32 tolerance
+    (the cond-inlined vs always-on graphs fuse differently at ulp level)."""
+    plat = _platform()
+    spec = spec_from_platform(plat)
+    cfg = _cfg()
+    batch = stack_task_arrays(
+        [tasks_to_arrays(_queue(s)) for s in (21, 22)])
+    sd = 3 + 5 * plat.n
+    ts0 = dp_train_init(jax.random.PRNGKey(cfg.seed), sd, plat.n,
+                        cfg.replay_capacity, 2)
+    ts_c, _, recs_c, loss_c, upd_c = make_dp_train_fn(
+        spec, cfg, 2, chunk_collectives=True)(ts0, batch)
+    ts_l, _, recs_l, loss_l, upd_l = make_dp_train_fn(
+        spec, cfg, 2, chunk_collectives=False)(ts0, batch)
+    np.testing.assert_array_equal(np.asarray(recs_c.action),
+                                  np.asarray(recs_l.action))
+    np.testing.assert_array_equal(np.asarray(upd_c, bool),
+                                  np.asarray(upd_l, bool))
+    assert int(ts_c.env_steps) == int(ts_l.env_steps)
+    assert int(ts_c.updates) == int(ts_l.updates) > 0
+    np.testing.assert_allclose(np.asarray(loss_c), np.asarray(loss_l),
+                               atol=1e-4)
+    for a, b in zip(ts_c.eval_p, ts_l.eval_p):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-4)
 
