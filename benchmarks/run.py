@@ -29,6 +29,7 @@ MODULES = [
     "kernel_micro",
     "roofline",
     "recovery",
+    "scenarios",
 ]
 
 

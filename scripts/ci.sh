@@ -35,6 +35,11 @@
 #    smoke gating on BENCH_recovery.json — crash-recovery parity exact,
 #    snapshot sync overhead < 10%, and graceful degradation strictly
 #    better than the same fault unhandled.
+# 10. Scenario-fleet gate (BENCH_scenarios.json): over the
+#    domain-randomized scenario families, the degradation-trained /
+#    health-aware FlexAI arm must have strictly lower deadline-miss than
+#    the fault-blind clean-trained arm on the faulted routes while
+#    staying within 2% STM of it on the clean routes.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -106,6 +111,22 @@ sys.exit(0 if ok else 1)
 EOF
 recovery=$?
 
+echo "== scenario-fleet gate (degradation-trained vs clean-trained) =="
+python -m benchmarks.run --only scenarios \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_scenarios.json"))
+g = r["gate"]
+ok = g["faulted_strictly_better"] and g["clean_within_2pct"]
+print(f"faulted_strictly_better={g['faulted_strictly_better']} "
+      f"(deg {r['degradation_trained']['faulted_miss']:.3f} vs "
+      f"clean {r['clean_trained']['faulted_miss']:.3f}) "
+      f"clean_stm_ratio={r['degradation_trained']['clean_stm_ratio']:.3f} "
+      f"candidate={r['degradation_trained']['candidate']}")
+sys.exit(0 if ok else 1)
+EOF
+scenarios=$?
+
 echo "== scan-engine parity gate (2 host devices) =="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
     python -m pytest -q -x tests/test_scan_engine.py
@@ -173,10 +194,10 @@ sys.exit(0 if ok else 1)
 EOF
 train_bench=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} =="
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} scenarios_exit=${scenarios} =="
 [ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
     && [ "${dp}" -eq 0 ] && [ "${pipeline}" -eq 0 ] \
     && [ "${bench}" -eq 0 ] \
     && [ "${train_bench}" -eq 0 ] && [ "${serve_prop}" -eq 0 ] \
     && [ "${serve_bench}" -eq 0 ] && [ "${durability}" -eq 0 ] \
-    && [ "${recovery}" -eq 0 ]
+    && [ "${recovery}" -eq 0 ] && [ "${scenarios}" -eq 0 ]

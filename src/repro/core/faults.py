@@ -1,0 +1,161 @@
+"""Deterministic in-scan fault model: schedules, traces, and replays.
+
+PR 6 injected accelerator faults only at the *serving* boundary
+(``serve/durability.py``): the scheduler inside the fused scan never saw
+them.  This module pushes the fault model into the device-resident
+engines (ISSUE 8):
+
+* a **fault schedule** is a list of :class:`FaultEvent` — (step, core,
+  factor) triples where ``factor`` 0.0 fails the core, 1.0 recovers it,
+  and anything in (0, 1) throttles it to that capacity;
+* :func:`build_health_trace` compiles a schedule into the dense
+  ``[T, n]`` **health trace** the scan engines consume: row ``t`` is the
+  capacity vector in force when the ``t``-th task commits (carry-forward
+  between events, everything healthy before the first);
+* every engine applies a trace row via ``platform_jax.with_health`` before
+  its policy runs, so dead cores drop out of the action support and
+  throttled cores advertise inflated effective exec times.
+
+Granularity contract (see DESIGN.md "Fault model & scenario families"):
+per-task engines (FlexAI, worst, ATA, the pipeline wavefront) sample the
+trace at every task index; windowed engines (Min-Min, GA, SA) sample it
+once at each window's first task index and hold it for the window — a
+planner that commits a 30-task window atomically reacts to faults at
+window boundaries.  :func:`window_health` encodes that convention so the
+fused paths and their reference replays agree bit-for-bit.
+
+``random_fault_events`` draws a seeded schedule (NumPy ``default_rng`` —
+the same seed always yields the same trace, on any backend), which is what
+the scenario generator's accelerator-fault family and the benchmarks use.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.platform_jax import (PlatformSpec, platform_init,
+                                     platform_step, with_health)
+from repro.core.tasks import TaskArrays
+
+
+class FaultEvent(NamedTuple):
+    """One scheduled health transition: at scan step ``step`` (a task
+    index), core ``core`` moves to capacity ``factor`` (0.0 = fail,
+    1.0 = recover, else degrade) and stays there until its next event."""
+    step: int
+    core: int
+    factor: float
+
+
+def build_health_trace(n_steps: int, n_cores: int,
+                       events: list) -> np.ndarray:
+    """Compile a fault schedule into the dense [n_steps, n_cores] f32
+    health trace (carry-forward semantics; all-healthy rows are 1.0)."""
+    trace = np.ones((max(n_steps, 1), n_cores), np.float32)
+    for ev in sorted(events, key=lambda e: e.step):
+        if not 0 <= ev.core < n_cores:
+            raise ValueError(
+                f"fault event core {ev.core} out of range for "
+                f"{n_cores} accelerators")
+        if ev.step < n_steps:
+            trace[max(ev.step, 0):, ev.core] = np.float32(ev.factor)
+    return trace
+
+
+def random_fault_events(seed: int, n_steps: int, n_cores: int,
+                        n_faults: int = 2, recover: bool = True,
+                        degrade_range: tuple = (0.25, 0.75),
+                        p_fail: float = 0.5) -> list:
+    """Seeded random fail/degrade/recover schedule.
+
+    Draws ``n_faults`` distinct cores; each faults at a random step in the
+    first two-thirds of the route (fail with probability ``p_fail``, else
+    a degrade drawn from ``degrade_range``) and, with ``recover=True``,
+    returns to full health at a later step.  Never faults every core at
+    once: core draws are without replacement and ``n_faults`` is clamped
+    to ``n_cores - 1`` so at least one survivor remains.
+    """
+    rng = np.random.default_rng(seed)
+    n_faults = int(min(n_faults, max(n_cores - 1, 0)))
+    cores = rng.choice(n_cores, size=n_faults, replace=False)
+    events = []
+    for core in cores:
+        lo, hi = 1, max(2 * n_steps // 3, 2)
+        at = int(rng.integers(lo, hi))
+        if rng.uniform() < p_fail:
+            factor = 0.0
+        else:
+            factor = float(rng.uniform(*degrade_range))
+        events.append(FaultEvent(step=at, core=int(core), factor=factor))
+        if recover:
+            back = int(rng.integers(at + max(n_steps // 6, 1),
+                                    max(n_steps, at + 2)))
+            events.append(FaultEvent(step=back, core=int(core), factor=1.0))
+    return events
+
+
+def window_health(trace, window: int):
+    """[T, n] trace -> [n_windows, n] per-window rows (the row at each
+    window's FIRST task index — the windowed engines' sampling contract).
+    Pads the tail window with the last row, mirroring
+    ``tasks.window_task_arrays``'s right-padding.  jnp-based so it can sit
+    inside a traced function."""
+    trace = jnp.asarray(trace)
+    t = trace.shape[0]
+    pad = -t % window
+    if pad:
+        trace = jnp.concatenate(
+            [trace, jnp.broadcast_to(trace[-1:], (pad, trace.shape[1]))])
+    return trace[::window]
+
+
+def healthy_trace(n_steps: int, n_cores: int) -> np.ndarray:
+    """The trivial all-alive trace (capacity 1.0 everywhere)."""
+    return np.ones((max(n_steps, 1), n_cores), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# task-major action replay (the reference semantics of a fault trace)
+# ---------------------------------------------------------------------------
+
+def _replay_run(spec: PlatformSpec):
+    """Un-jitted task-major replay of FIXED placements under a fault
+    trace: one ``platform_step`` per task in stream order, health row
+    ``t`` installed before step ``t``.  This is the reference execution
+    semantics every fused fault-trace engine must reproduce — and the
+    evaluation path for a fault-BLIND scheduler (compute placements with
+    no trace, replay them under one: dead-core picks pay the
+    ``HEALTH_FLOOR`` penalty, which is exactly the deployment cost of
+    ignoring degradation)."""
+
+    def body(state, x):
+        task, action, hrow = x
+        return platform_step(spec, with_health(state, hrow), task,
+                             action.astype(jnp.int32))
+
+    def run(tasks: TaskArrays, actions, health=None, state0=None):
+        t = tasks.arrival.shape[0]
+        if health is None:
+            health = jnp.ones((t, spec.n), jnp.float32)
+        init = platform_init(spec.n) if state0 is None else state0
+        return jax.lax.scan(body, init,
+                            (tasks, jnp.asarray(actions), health))
+
+    return run
+
+
+_REPLAY_CACHE: dict = {}
+
+
+def replay_actions(spec: PlatformSpec, tasks: TaskArrays, actions,
+                   health=None):
+    """Jitted convenience wrapper over :func:`_replay_run` (cached per
+    platform table)."""
+    key = (np.asarray(spec.exec_time).tobytes(),
+           np.asarray(spec.energy).tobytes())
+    if key not in _REPLAY_CACHE:
+        _REPLAY_CACHE[key] = jax.jit(_replay_run(spec))
+    return _REPLAY_CACHE[key](tasks, actions, health)

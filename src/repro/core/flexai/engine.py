@@ -39,7 +39,7 @@ from repro.core.flexai.reward import reward_from_states
 from repro.core.platform_jax import (PlatformSpec, kind_feature_table,
                                      platform_init, platform_step,
                                      spec_from_platform, state_vector,
-                                     summarize)
+                                     summarize, with_health)
 from repro.core.tasks import (TaskArrays, pad_task_arrays,
                               stack_task_arrays, tasks_to_arrays)
 
@@ -50,18 +50,30 @@ from repro.core.tasks import (TaskArrays, pad_task_arrays,
 
 def _schedule_run(spec: PlatformSpec, backlog_scale: float):
     """Un-jitted single-route greedy episode: the shared core that the
-    jitted, vmapped and shard_mapped entry points all wrap."""
+    jitted, vmapped and shard_mapped entry points all wrap.
+
+    An optional ``health`` trace ([T, n], core.faults) is installed row
+    by row before each policy step: the state vector's exec column
+    inflates by 1/capacity and the Q argmax is masked to alive cores.
+    With no trace every row is 1.0, which divides and masks as the
+    identity — placements match the pre-fault engine bit-exactly."""
     feat = jnp.asarray(kind_feature_table())
 
-    def body(params, state, task):
+    def body(params, state, x):
+        task, hrow = x
+        state = with_health(state, hrow)
         sv = state_vector(spec, feat, backlog_scale, state, task)
-        action = jnp.argmax(qnet_apply(params, sv)).astype(jnp.int32)
+        q = jnp.where(state.alive, qnet_apply(params, sv), -jnp.inf)
+        action = jnp.argmax(q).astype(jnp.int32)
         return platform_step(spec, state, task, action)
 
-    def run(params, tasks: TaskArrays, state0=None):
+    def run(params, tasks: TaskArrays, state0=None, health=None):
         init = platform_init(spec.n) if state0 is None else state0
+        t = tasks.arrival.shape[0]
+        trace = (jnp.ones((t, spec.n), jnp.float32) if health is None
+                 else jnp.asarray(health, jnp.float32))
         final, recs = jax.lax.scan(functools.partial(body, params),
-                                   init, tasks)
+                                   init, (tasks, trace))
         return final, recs
 
     return run
@@ -107,7 +119,15 @@ def make_schedule_fn(spec: PlatformSpec, backlog_scale: float = 1.0,
     """
     run = _schedule_run(spec, backlog_scale)
     if batched:
-        run = jax.vmap(run, in_axes=(None, 0))
+        single = run
+
+        def run(params, tasks, health=None):
+            # per-route fault traces vmap alongside the routes; the
+            # healthy default keeps the two-arg call signature intact
+            if health is None:
+                return jax.vmap(single, in_axes=(None, 0))(params, tasks)
+            return jax.vmap(lambda p, t, h: single(p, t, health=h),
+                            in_axes=(None, 0, 0))(params, tasks, health)
     return jax.jit(run)
 
 
@@ -164,16 +184,28 @@ def train_init(key, state_dim: int, n_actions: int,
 
 def _train_run(spec: PlatformSpec, cfg):
     """Un-jitted single-lane fused training episode (see
-    :func:`make_train_fn` for the contract)."""
+    :func:`make_train_fn` for the contract).
+
+    The optional ``health`` trace makes this the *degradation trainer*:
+    the greedy arm is masked to alive cores and ``platform_step`` charges
+    health-scaled exec/energy, so the reward stream penalizes placements
+    on throttled cores.  Random exploration stays uniform over all cores —
+    the agent must *learn* to avoid degraded ones, and the PRNG stream is
+    untouched, so a healthy trace reproduces the clean trainer bit-exactly
+    (the DP-parity contract; the DP trainer itself stays clean-only)."""
     feat = jnp.asarray(kind_feature_table())
     n_actions = spec.n
 
     def body(carry, x):
         # sv rides the carry: nsv computed at step i-1 IS step i's
         # observation (same platform state, same task row), so each step
-        # builds exactly one state vector instead of two
+        # builds exactly one state vector instead of two.  The health row
+        # lands on the *platform* before the step commits; the observation
+        # sees it one step later (nsv is built from the stepped state) —
+        # the action mask, not the exec column, is the fresh fault signal.
         ts, plat, sv = carry
-        task, nxt_task, done = x
+        task, nxt_task, done, hrow = x
+        plat = with_health(plat, hrow)
         key, k_eps, k_act, k_smp = jax.random.split(ts.key, 4)
 
         frac = jnp.minimum(
@@ -181,7 +213,8 @@ def _train_run(spec: PlatformSpec, cfg):
             / max(cfg.eps_decay_steps, 1))
         eps = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
         explore = jax.random.uniform(k_eps) < eps
-        greedy = jnp.argmax(qnet_apply(ts.eval_p, sv))
+        greedy = jnp.argmax(jnp.where(plat.alive,
+                                      qnet_apply(ts.eval_p, sv), -jnp.inf))
         action = jnp.where(
             explore, jax.random.randint(k_act, (), 0, n_actions),
             greedy).astype(jnp.int32)
@@ -219,7 +252,7 @@ def _train_run(spec: PlatformSpec, cfg):
                          updates=updates, key=key)
         return (ts2, plat2, nsv), (rec, loss, do_update)
 
-    def run(ts: TrainState, tasks: TaskArrays):
+    def run(ts: TrainState, tasks: TaskArrays, health=None):
         # S_{i+1} pairs with the *next valid* task; the last valid task
         # pairs with itself and carries done=True, matching the Python
         # loop — on padded routes the terminal transition must not
@@ -232,11 +265,13 @@ def _train_run(spec: PlatformSpec, cfg):
             tasks)
         t = tasks.arrival.shape[0]
         done = jnp.arange(t) == tasks.valid.sum() - 1
+        trace = (jnp.ones((t, spec.n), jnp.float32) if health is None
+                 else jnp.asarray(health, jnp.float32))
         plat0 = platform_init(spec.n)
         sv0 = state_vector(spec, feat, cfg.backlog_scale, plat0,
                            jax.tree_util.tree_map(lambda a: a[0], tasks))
         (ts_f, plat_f, _), (recs, losses, upd_mask) = jax.lax.scan(
-            body, (ts, plat0, sv0), (tasks, nxt, done))
+            body, (ts, plat0, sv0), (tasks, nxt, done, trace))
         return ts_f, plat_f, recs, losses, upd_mask
 
     return run
@@ -255,7 +290,13 @@ def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
     # arrays, and donating an aliased pytree is an XLA error
     run = _train_run(spec, cfg)
     if batched:
-        run = jax.vmap(run, in_axes=(0, 0))
+        single = run
+
+        def run(ts, tasks, health=None):
+            if health is None:
+                return jax.vmap(single, in_axes=(0, 0))(ts, tasks)
+            return jax.vmap(lambda s, t, h: single(s, t, health=h),
+                            in_axes=(0, 0, 0))(ts, tasks, health)
     return jax.jit(run)
 
 
@@ -593,9 +634,18 @@ class ScanFlexAI:
         return tasks if isinstance(tasks, TaskArrays) else \
             tasks_to_arrays(tasks)
 
-    def train_episode(self, tasks) -> dict:
+    def train_episode(self, tasks, health=None) -> dict:
         """One fused episode (single-lane) or one episode per lane
-        (``tasks`` as a list of routes / stacked TaskArrays)."""
+        (``tasks`` as a list of routes / stacked TaskArrays).
+
+        ``health`` is an optional fault trace — [T, n] single-lane,
+        [lanes, T, n] for population lanes — consumed by the degradation
+        trainer (core.faults); the DP and sharded trainers are clean-only.
+        """
+        if health is not None and (self.dp or self.mesh is not None):
+            raise ValueError(
+                "fault-trace training is supported on the single-host "
+                "population trainer only (not dp/mesh)")
         if self.lanes > 1:
             ta = tasks if isinstance(tasks, TaskArrays) else \
                 stack_task_arrays([self._as_arrays(q) for q in tasks])
@@ -603,7 +653,11 @@ class ScanFlexAI:
             ta = self._as_arrays(tasks)
             if self.dp:  # the DP runner always carries a [lanes, T] axis
                 ta = TaskArrays(*[np.asarray(f)[None] for f in ta])
-        self.ts, plat, recs, losses, upd = self._train_fn(self.ts, ta)
+        if health is None:
+            self.ts, plat, recs, losses, upd = self._train_fn(self.ts, ta)
+        else:
+            self.ts, plat, recs, losses, upd = self._train_fn(
+                self.ts, ta, health=jnp.asarray(health, jnp.float32))
         losses, upd = np.asarray(losses), np.asarray(upd, bool)
         if upd.any():
             self.losses.extend(losses[upd].tolist())
@@ -771,10 +825,15 @@ class ScanFlexAI:
         from repro.core.flexai.dqn import load_dqn_npz
         self.set_params(load_dqn_npz(path))
 
-    def schedule(self, tasks, lane: int = 0) -> dict:
+    def schedule(self, tasks, lane: int = 0, health=None) -> dict:
         ta = self._as_arrays(tasks)
         t0 = time.perf_counter()
-        final, recs = self._sched_fn(self.eval_params(lane), ta)
+        if health is None:
+            final, recs = self._sched_fn(self.eval_params(lane), ta)
+        else:
+            final, recs = self._sched_fn(
+                self.eval_params(lane), ta,
+                health=jnp.asarray(health, jnp.float32))
         jax.block_until_ready(final)
         dt = time.perf_counter() - t0
         summ = summarize(self.spec, final, recs)

@@ -56,10 +56,10 @@ from repro.core.flexai.engine import TrainState, dp_train_init, train_init
 from repro.core.flexai.replay import device_replay_add, device_replay_sample
 from repro.core.flexai.reward import reward_from_states
 from repro.core.platform_jax import (PlatformSpec, PlatformState,
-                                     kind_feature_table, platform_init,
-                                     platform_step, spec_from_platform,
-                                     stage_state_vector, state_vector,
-                                     summarize)
+                                     health_capacity, kind_feature_table,
+                                     platform_init, platform_step,
+                                     spec_from_platform, stage_state_vector,
+                                     state_vector, summarize, with_health)
 from repro.core.tasks import (KIND_ORDER, TABLE5_FPS, TaskArrays,
                               _model_stats, pad_task_arrays,
                               stack_task_arrays, stage_layer_stats,
@@ -288,8 +288,12 @@ def _make_policy(policy: str, spec: PlatformSpec, plan: StagePlan,
 
     if policy == "eft":
         def act(params, sp, state, trow, s):
+            # health-effective finish times: dead cores pay 1/HEALTH_FLOOR
+            # so the argmin routes around them without shrinking the group
+            # mask (an all-dead group still yields an in-group action);
+            # all-healthy divides by exactly 1.0 — the pre-fault argmin
             ct = jnp.maximum(trow.arrival, state.avail) \
-                + sp.exec_time[:, trow.kind]
+                + sp.exec_time[:, trow.kind] / health_capacity(state)
             ct = jnp.where(plan.group_mask[s], ct, jnp.inf)
             return jnp.argmin(ct).astype(jnp.int32)
     elif policy == "flexai":
@@ -301,13 +305,19 @@ def _make_policy(policy: str, spec: PlatformSpec, plan: StagePlan,
                 group_mask=plan.group_mask[s],
                 stage_frac=s.astype(jnp.float32) if hasattr(s, "astype")
                 else jnp.float32(s))
-            q = jnp.where(plan.group_mask[s], qnet_apply(params, sv),
-                          -jnp.inf)
+            # mask to live group members; if the whole group is down fall
+            # back to the bare group mask (least-bad in-group placement)
+            gmask = plan.group_mask[s] & state.alive
+            gmask = jnp.where(gmask.any(), gmask, plan.group_mask[s])
+            q = jnp.where(gmask, qnet_apply(params, sv), -jnp.inf)
             return jnp.argmax(q).astype(jnp.int32)
     elif policy == "task":
         def act(params, sp, state, trow, s):
             sv = state_vector(spec, feat, backlog_scale, state, trow)
-            return jnp.argmax(qnet_apply(params, sv)).astype(jnp.int32)
+            amask = jnp.where(state.alive.any(), state.alive,
+                              jnp.ones_like(state.alive))
+            q = jnp.where(amask, qnet_apply(params, sv), -jnp.inf)
+            return jnp.argmax(q).astype(jnp.int32)
     else:
         raise ValueError(f"unknown pipeline policy {policy!r}")
     return act
@@ -375,7 +385,11 @@ def _pipeline_segment_run(spec: PlatformSpec, plan: StagePlan,
 
     def body(params, carry, x):
         state, ring = carry
-        row, s = x
+        row, s, hrow = x
+        # health rows are indexed by TASK: every stage of task k installs
+        # row k before acting, so the wavefront interleaving and the
+        # task-major reference agree step-for-step under the same trace
+        state = with_health(state, hrow)
         sp = stage_spec(spec, plan, s)
         trow = _stage_task_view(plan, ring, row, s)
         action = act(params, sp, state, trow, s)
@@ -383,11 +397,14 @@ def _pipeline_segment_run(spec: PlatformSpec, plan: StagePlan,
         ring2 = ring.at[s].set(jnp.where(row.valid, rec.finish, ring[s]))
         return (state2, ring2), rec
 
-    def run(params, rows, s_seq, state0=None, ring0=None):
+    def run(params, rows, s_seq, state0=None, ring0=None, health=None):
         init = platform_init(spec.n) if state0 is None else state0
         ring = jnp.zeros((S,), jnp.float32) if ring0 is None else ring0
+        trace = (jnp.ones((rows.arrival.shape[0], spec.n), jnp.float32)
+                 if health is None else jnp.asarray(health, jnp.float32))
         (final, ringf), recs = jax.lax.scan(
-            functools.partial(body, params), (init, ring), (rows, s_seq))
+            functools.partial(body, params), (init, ring),
+            (rows, s_seq, trace))
         return final, ringf, recs
 
     return run
@@ -400,10 +417,21 @@ def _pipeline_run(spec: PlatformSpec, plan: StagePlan,
     seg = _pipeline_segment_run(spec, plan, backlog_scale, policy)
     S = int(plan.stage_exec.shape[0])
 
-    def run(params, tasks: TaskArrays, state0=None, ring0=None):
+    def run(params, tasks: TaskArrays, state0=None, ring0=None,
+            health=None):
         T = tasks.arrival.shape[0]
         rows, s_seq = _wavefront_stream(tasks, S)
-        final, ring, recs = seg(params, rows, s_seq, state0, ring0)
+        hflat = None
+        if health is not None:
+            # [T, n] task-indexed trace -> flat wavefront order (the
+            # clip-gather mirrors _wavefront_stream; corner rows are
+            # overwritten before any later action, so clipping is safe)
+            k_seq = jnp.repeat(jnp.arange(T + S - 1), S) \
+                - jnp.tile(jnp.arange(S - 1, -1, -1), T + S - 1)
+            hflat = jnp.asarray(health, jnp.float32)[
+                jnp.clip(k_seq, 0, T - 1)]
+        final, ring, recs = seg(params, rows, s_seq, state0, ring0,
+                                health=hflat)
         recs = jax.tree_util.tree_map(
             lambda a: a[_record_order(T, S)], recs)
         return final, ring, recs
@@ -419,7 +447,13 @@ def make_pipeline_schedule_fn(spec: PlatformSpec, plan: StagePlan,
     [R, T] route batch (params shared)."""
     run = _pipeline_run(spec, plan, backlog_scale, policy)
     if batched:
-        run = jax.vmap(run, in_axes=(None, 0))
+        single = run
+
+        def run(params, tasks, health=None):
+            if health is None:
+                return jax.vmap(single, in_axes=(None, 0))(params, tasks)
+            return jax.vmap(lambda p, t, h: single(p, t, health=h),
+                            in_axes=(None, 0, 0))(params, tasks, health)
     return jax.jit(run)
 
 
@@ -434,8 +468,10 @@ def _pipeline_reference_run(spec: PlatformSpec, plan: StagePlan,
     act = _make_policy(policy, spec, plan, backlog_scale)
     S = int(plan.stage_exec.shape[0])
 
-    def body(params, carry, row):
+    def body(params, carry, x):
+        row, hrow = x
         state, ring = carry
+        state = with_health(state, hrow)
         out = []
         for s_i in range(S):
             s = jnp.int32(s_i)
@@ -449,10 +485,13 @@ def _pipeline_reference_run(spec: PlatformSpec, plan: StagePlan,
         recs = jax.tree_util.tree_map(lambda *r: jnp.stack(r), *out)
         return (state, ring), recs
 
-    def run(params, tasks: TaskArrays):
+    def run(params, tasks: TaskArrays, health=None):
+        t = tasks.arrival.shape[0]
+        trace = (jnp.ones((t, spec.n), jnp.float32) if health is None
+                 else jnp.asarray(health, jnp.float32))
         init = (platform_init(spec.n), jnp.zeros((S,), jnp.float32))
         (final, ring), recs = jax.lax.scan(
-            functools.partial(body, params), init, tasks)
+            functools.partial(body, params), init, (tasks, trace))
         return final, ring, recs
 
     return run
@@ -464,7 +503,13 @@ def make_pipeline_reference_fn(spec: PlatformSpec, plan: StagePlan,
                                batched: bool = False):
     run = _pipeline_reference_run(spec, plan, backlog_scale, policy)
     if batched:
-        run = jax.vmap(run, in_axes=(None, 0))
+        single = run
+
+        def run(params, tasks, health=None):
+            if health is None:
+                return jax.vmap(single, in_axes=(None, 0))(params, tasks)
+            return jax.vmap(lambda p, t, h: single(p, t, health=h),
+                            in_axes=(None, 0, 0))(params, tasks, health)
     return jax.jit(run)
 
 
@@ -570,7 +615,8 @@ def combine_stage_states(plan: StagePlan, states: PlatformState
         MS=pick(states.MS), R_Balance=pick(states.R_Balance),
         num_tasks=pick(states.num_tasks),
         e_scale=jnp.maximum(jnp.float32(1e-9), E.sum(-1)),
-        t_scale=jnp.maximum(jnp.float32(1e-9), T.max(-1)))
+        t_scale=jnp.maximum(jnp.float32(1e-9), T.max(-1)),
+        alive=pick(states.alive), cap=pick(states.cap))
 
 
 def pipeline_summarize(spec: PlatformSpec, state: PlatformState,

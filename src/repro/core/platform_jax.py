@@ -39,7 +39,16 @@ class PlatformSpec(NamedTuple):
 
 
 class PlatformState(NamedTuple):
-    """The mutable half of ``HMAIPlatform`` as arrays (HW-Info, §7.2)."""
+    """The mutable half of ``HMAIPlatform`` as arrays (HW-Info, §7.2).
+
+    ``alive`` / ``cap`` are the per-accelerator health vector (ISSUE 8):
+    ``alive`` masks failed cores out of every policy's action support, and
+    ``cap`` is the capacity scale of the survivors (thermal throttle 0.5x
+    -> exec/energy lookups inflate by 1/0.5).  Default all-alive at
+    ``cap=1.0``, where every lookup divides by exactly 1.0 — bit-identical
+    to the pre-health engine.  The scan engines refresh both fields from a
+    fault-schedule trace (``core.faults``) before each step.
+    """
     avail: jax.Array       # [n] next-free time per accelerator
     busy: jax.Array        # [n] cumulative busy seconds
     E: jax.Array           # [n] energy
@@ -49,6 +58,36 @@ class PlatformState(NamedTuple):
     num_tasks: jax.Array   # [n] i32
     e_scale: jax.Array     # scalar: running max total energy (HW-Info norm)
     t_scale: jax.Array     # scalar: running max makespan
+    alive: jax.Array       # [n] bool health mask (False = failed core)
+    cap: jax.Array         # [n] f32 capacity scale of alive cores
+
+
+# Effective-capacity floor for a dead core that a policy places on anyway
+# (blind replay of a fault trace): exec/energy inflate by 1/HEALTH_FLOOR
+# instead of dividing by zero, so the penalty is huge but finite and the
+# engines stay parity-comparable.
+HEALTH_FLOOR = 1e-3
+
+# Observation-side slowdown cap (state_vector only): a dead core's
+# 1/HEALTH_FLOOR = 1000x exec entry would saturate the Q-net's inputs and
+# corrupt its ranking of the *alive* cores; the alive-mask already carries
+# "dead", so the observation advertises slowdowns only up to this factor.
+# Timing/energy accounting (platform_step) is NOT clamped.
+OBS_SLOWDOWN_CAP = 10.0
+
+
+def health_capacity(state: PlatformState) -> jax.Array:
+    """[n] effective capacity: ``cap`` for alive cores, ``HEALTH_FLOOR``
+    for dead ones.  Every exec/energy lookup divides by this — the single
+    place the health vector meets the timing model."""
+    return jnp.maximum(jnp.where(state.alive, state.cap, 0.0), HEALTH_FLOOR)
+
+
+def with_health(state: PlatformState, hrow: jax.Array) -> PlatformState:
+    """Install one fault-trace row ([n] f32; 0 = dead, (0, 1] = capacity)
+    into the state's health vector."""
+    return state._replace(alive=hrow > 0.0,
+                          cap=jnp.where(hrow > 0.0, hrow, 1.0))
 
 
 class StepRecord(NamedTuple):
@@ -92,6 +131,7 @@ def platform_init(n: int) -> PlatformState:
         avail=z, busy=z, E=z, T=z, MS=z, R_Balance=z,
         num_tasks=jnp.zeros((n,), jnp.int32),
         e_scale=jnp.float32(1e-9), t_scale=jnp.float32(1e-9),
+        alive=jnp.ones((n,), bool), cap=jnp.ones((n,), jnp.float32),
     )
 
 
@@ -111,6 +151,8 @@ def state_from_platform(platform) -> PlatformState:
         num_tasks=jnp.asarray(platform.num_tasks, jnp.int32),
         e_scale=jnp.float32(platform._e_scale),
         t_scale=jnp.float32(platform._t_scale),
+        alive=jnp.ones((platform.n,), bool),
+        cap=jnp.ones((platform.n,), jnp.float32),
     )
 
 
@@ -154,8 +196,12 @@ def platform_step(spec: PlatformSpec, state: PlatformState, task: TaskArrays,
         valid = task.valid
     a = action.astype(jnp.int32)
     kind = task.kind
-    et = spec.exec_time[a, kind]
-    en = spec.energy[a, kind]
+    # health folds into the lookups: a core at capacity c runs 1/c slower
+    # at constant power draw (1/c the energy too); all-healthy divides by
+    # exactly 1.0, preserving the pre-health engine bit-for-bit
+    eff = health_capacity(state)[a]
+    et = spec.exec_time[a, kind] / eff
+    en = spec.energy[a, kind] / eff
     start = jnp.maximum(task.arrival, state.avail[a])
     finish = start + et
     wait = start - task.arrival
@@ -184,6 +230,7 @@ def platform_step(spec: PlatformSpec, state: PlatformState, task: TaskArrays,
         num_tasks=num_tasks,
         e_scale=jnp.maximum(state.e_scale, E.sum()),
         t_scale=jnp.maximum(state.t_scale, T.max()),
+        alive=state.alive, cap=state.cap,
     )
     new = jax.tree_util.tree_map(
         lambda nv, ov: jnp.where(valid, nv, ov), new, state)
@@ -225,13 +272,26 @@ def state_vector(spec: PlatformSpec, feat_table: jax.Array,
                  backlog_scale, state: PlatformState,
                  task: TaskArrays) -> jax.Array:
     """FlexAI observation for one task: Task-Info + HW-Info + exec column —
-    the array mirror of ``FlexAIAgent.state_vector``."""
+    the array mirror of ``FlexAIAgent.state_vector``.
+
+    The exec column is the health-EFFECTIVE one (Table-8 times divided by
+    the capacity vector): a throttled core advertises its true slowdown to
+    the Q-net, so the degradation-trained agent can reroute on magnitude
+    and not just the dead/alive mask.  The advertised slowdown saturates
+    at ``OBS_SLOWDOWN_CAP`` — a dead core's 1/HEALTH_FLOOR entry would
+    blow up the net's inputs and scramble its ranking of the survivors,
+    and the argmax mask already excludes dead cores.  All-healthy divides
+    by 1.0 (under the cap) — the observation (and hence the loop-agent
+    parity) is unchanged.
+    """
     tf = jnp.concatenate([feat_table[task.kind],
                           jnp.asarray(task.safety, jnp.float32)[None]])
     hw = hw_info_state(state, task.arrival)
     backlog = jnp.log1p(hw[:, 1] / backlog_scale)
+    slow = jnp.minimum(1.0 / health_capacity(state), OBS_SLOWDOWN_CAP)
     hw = jnp.stack([hw[:, 0], backlog, hw[:, 2], hw[:, 3],
-                    spec.exec_time[:, task.kind]], axis=1)
+                    spec.exec_time[:, task.kind] * slow],
+                   axis=1)
     return jnp.concatenate([tf, hw.reshape(-1)])
 
 
@@ -266,7 +326,8 @@ def stage_state_vector(spec: PlatformSpec, feat_table: jax.Array,
     backlog = jnp.log1p(
         jnp.maximum(state.avail - task.arrival, 0.0) / backlog_scale)
     ms_norm = state.MS / nt
-    ex = stage_exec[:, task.kind] / jnp.maximum(spec.gvalue_t_scale, 1e-12)
+    ex = stage_exec[:, task.kind] / health_capacity(state) \
+        / jnp.maximum(spec.gvalue_t_scale, 1e-12)
     per = jnp.stack([e_norm, backlog, state.R_Balance, ms_norm, ex, mask],
                     axis=1) * mask[:, None]
     return jnp.concatenate([tf, per.reshape(-1)])

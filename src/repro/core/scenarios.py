@@ -1,0 +1,165 @@
+"""Domain-randomized scenario generator: vmapped TaskArrays families.
+
+The paper's variability claim needs more than one replayed Table-5 route:
+this module turns a base route into a fleet of randomized scenarios, as
+pure jnp transforms vmapped over PRNG keys, so thousands of scenario
+variants generate in one device dispatch and feed straight into the
+existing engines (training lanes, scan heuristics, replay evaluation).
+
+Named families (``FAMILIES``):
+
+* ``clean``          — the base route, untouched (the control arm).
+* ``sensor_dropout`` — camera groups fail for the whole route: each
+  non-front group drops with probability ``drop_p`` and its tasks become
+  invalid rows (the front-center group always survives, as a driving
+  platform would never mask its primary camera).
+* ``weather``        — the task *rate* scales by r ~ U(0.6, 1.6) (rain
+  doubles tracker load, empty highway halves it): arrival times divide
+  by r, order-preserving.
+* ``burst``          — a cut-in: tasks inside a window around a random
+  route point compress toward it (arrival' = c + 0.2 * (arrival - c)),
+  a local 5x rate spike; the map is monotone, so arrivals stay sorted.
+* ``fault``          — the base route plus an accelerator fail/degrade/
+  recover health trace (``core.faults`` semantics, drawn on-device so the
+  family vmaps like the rest).
+
+Every family also returns a ``[T, n]`` health trace (all-ones except
+``fault``), so downstream consumers treat scenarios uniformly as
+(tasks, health) pairs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tasks import GROUP_ORDER, TaskArrays
+
+FAMILIES = ("clean", "sensor_dropout", "weather", "burst", "fault")
+
+
+class ScenarioBatch(NamedTuple):
+    """A generated scenario fleet: stacked tasks [S, T], aligned health
+    traces [S, T, n], and the host-side family label per row."""
+    tasks: TaskArrays
+    health: jax.Array
+    family: np.ndarray   # [S] indices into FAMILIES (host array)
+
+    @property
+    def num_scenarios(self) -> int:
+        return int(self.health.shape[0])
+
+    def family_rows(self, name: str) -> np.ndarray:
+        return np.nonzero(self.family == FAMILIES.index(name))[0]
+
+
+# ---------------------------------------------------------------------------
+# per-family transforms (single scenario; vmapped over keys by the batcher)
+# ---------------------------------------------------------------------------
+
+def _clean(base: TaskArrays, key) -> TaskArrays:
+    return base
+
+
+def _sensor_dropout(base: TaskArrays, key, drop_p: float = 0.4
+                    ) -> TaskArrays:
+    n_groups = len(GROUP_ORDER)
+    keep = jax.random.bernoulli(key, 1.0 - drop_p, (n_groups,))
+    keep = keep.at[0].set(True)              # front-center never drops
+    return base._replace(valid=base.valid & keep[base.group])
+
+
+def _weather(base: TaskArrays, key, lo: float = 0.6, hi: float = 1.6
+             ) -> TaskArrays:
+    rate = jax.random.uniform(key, (), minval=lo, maxval=hi)
+    return base._replace(arrival=base.arrival / rate)
+
+
+def _burst(base: TaskArrays, key, span_frac: float = 0.15,
+           squeeze: float = 0.2) -> TaskArrays:
+    total = jnp.max(jnp.where(base.valid, base.arrival, 0.0))
+    k_c, = jax.random.split(key, 1)
+    center = jax.random.uniform(k_c, ()) * total
+    width = span_frac * total
+    near = jnp.abs(base.arrival - center) < width
+    squeezed = center + squeeze * (base.arrival - center)
+    return base._replace(arrival=jnp.where(near, squeezed, base.arrival))
+
+
+def _fault_trace(key, t: int, n_cores: int, n_faults: int = 2,
+                 p_fail: float = 0.5) -> jax.Array:
+    """On-device fail/degrade/recover trace: ``n_faults`` distinct cores
+    (never all of them) fault in the first two-thirds of the route and
+    recover later — the jnp twin of ``faults.random_fault_events``."""
+    n_faults = int(min(n_faults, max(n_cores - 1, 0)))
+    k_core, k_at, k_back, k_fail, k_deg = jax.random.split(key, 5)
+    cores = jax.random.permutation(k_core, n_cores)[:n_faults]
+    at = jax.random.randint(k_at, (n_faults,), 1, max(2 * t // 3, 2))
+    back = at + jax.random.randint(k_back, (n_faults,),
+                                   max(t // 6, 1), max(t, 2))
+    fail = jax.random.bernoulli(k_fail, p_fail, (n_faults,))
+    degrade = jax.random.uniform(k_deg, (n_faults,),
+                                 minval=0.25, maxval=0.75)
+    factor = jnp.where(fail, 0.0, degrade)
+    steps = jnp.arange(t)
+    in_window = ((steps[None, :] >= at[:, None])
+                 & (steps[None, :] < back[:, None]))        # [F, T]
+    onehot = cores[:, None] == jnp.arange(n_cores)[None, :]  # [F, n]
+    # cores are distinct, so the per-fault deltas sum without clashing
+    delta = jnp.sum(in_window[:, :, None] * onehot[:, None, :]
+                    * (factor[:, None, None] - 1.0), axis=0)
+    return 1.0 + delta                                       # [T, n]
+
+
+# ---------------------------------------------------------------------------
+# the batcher
+# ---------------------------------------------------------------------------
+
+def scenario_batch(base: TaskArrays, n_cores: int, seed: int,
+                   n_per_family: int = 8,
+                   families: tuple = FAMILIES) -> ScenarioBatch:
+    """Generate ``n_per_family`` scenarios per family from one base route,
+    each family in a single vmapped dispatch.  Deterministic in ``seed``.
+    """
+    t = int(np.asarray(base.arrival).shape[0])
+    transforms = {
+        "clean": _clean,
+        "sensor_dropout": _sensor_dropout,
+        "weather": _weather,
+        "burst": _burst,
+        "fault": _clean,
+    }
+    key = jax.random.PRNGKey(seed)
+    task_stacks, health_stacks, labels = [], [], []
+    for fi, name in enumerate(families):
+        fkey = jax.random.fold_in(key, fi)
+        keys = jax.random.split(fkey, n_per_family)
+        tasks = jax.vmap(transforms[name], in_axes=(None, 0))(base, keys)
+        if name == "fault":
+            health = jax.vmap(
+                lambda k: _fault_trace(k, t, n_cores))(keys)
+        else:
+            health = jnp.ones((n_per_family, t, n_cores), jnp.float32)
+        task_stacks.append(tasks)
+        health_stacks.append(health)
+        labels.extend([FAMILIES.index(name)] * n_per_family)
+    tasks = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs), *task_stacks)
+    return ScenarioBatch(tasks=tasks,
+                         health=jnp.concatenate(health_stacks),
+                         family=np.asarray(labels, np.int32))
+
+
+def scenario_lane_batches(batch: ScenarioBatch, lanes: int):
+    """Host-side iterator over [lanes, T] / [lanes, T, n] slices (order
+    shuffled deterministically by scenario index) — the shape the
+    population trainer's ``train_episode(tasks, health=...)`` consumes.
+    The tail partial batch is dropped."""
+    s = batch.num_scenarios
+    order = np.random.default_rng(s).permutation(s)
+    for i in range(0, s - lanes + 1, lanes):
+        rows = np.sort(order[i:i + lanes])
+        yield (jax.tree_util.tree_map(lambda a: a[rows], batch.tasks),
+               batch.health[rows])

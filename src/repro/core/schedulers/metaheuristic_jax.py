@@ -38,9 +38,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import window_health
 from repro.core.platform_jax import (PlatformSpec, PlatformState,
-                                     platform_init, platform_step,
-                                     spec_from_platform)
+                                     health_capacity, platform_init,
+                                     platform_step, spec_from_platform,
+                                     with_health)
 from repro.core.schedulers.base import Scheduler, register
 from repro.core.tasks import TaskArrays, tasks_to_arrays, window_task_arrays
 
@@ -56,12 +58,27 @@ class GAConfig(NamedTuple):
 class SAConfig(NamedTuple):
     """Mirrors ``SAScheduler``; ``chains`` parallel annealing chains are
     the population axis the device path adds (chains=1 == the oracle's
-    single trajectory, modulo the RNG stream)."""
+    single trajectory, modulo the RNG stream).
+
+    ``tempering=True`` switches the chains from independent Kirkpatrick
+    annealing (every chain walks the same decaying temperature schedule)
+    to **parallel tempering**: each chain holds a FIXED temperature on a
+    geometric ladder from ``t_start`` (hot, chain 0) to ``t_end`` (cold),
+    and every ``exchange_every`` iterations adjacent chains attempt a
+    replica-exchange Metropolis swap.  Fidelity note: this is no longer
+    Kirkpatrick SA — there is no cooling schedule, so per-chain behaviour
+    does not converge on the oracle's trajectory; what it buys is mixing
+    (hot chains tunnel out of local minima and hand good states down the
+    ladder), which at equal iteration budgets gives equal-or-better best
+    fitness with the chains the device path already vmaps for free.
+    """
     window: int = 30
     iters: int = 120
     t_start: float = 1.0
     t_end: float = 0.01
     chains: int = 8
+    tempering: bool = False
+    exchange_every: int = 10
 
 
 # ---------------------------------------------------------------------------
@@ -105,11 +122,16 @@ def window_fitness(spec: PlatformSpec, state: PlatformState,
     are identity maps and contribute no energy.
     """
     a = assignment.astype(jnp.int32)
-    et = spec.exec_time[a, wtasks.kind]                       # [W]
+    # health scale from the snapshot state: throttled cores inflate
+    # et/energy by 1/capacity, dead cores by 1/HEALTH_FLOOR — fitness
+    # pressure alone drives genes off dead cores, no explicit masking
+    # (all-healthy divides by exactly 1.0: the oracle parity is intact)
+    eff = health_capacity(state)
+    et = spec.exec_time[a, wtasks.kind] / eff[a]              # [W]
     onehot = ((a[:, None] == jnp.arange(spec.n)[None, :])
               & wtasks.valid[:, None])                        # [W, n]
     energy = jnp.sum(jnp.where(wtasks.valid,
-                               spec.energy[a, wtasks.kind], 0.0))
+                               spec.energy[a, wtasks.kind] / eff[a], 0.0))
     c = jnp.where(onehot, et[:, None], 0.0)
     d = jnp.where(onehot, (wtasks.arrival + et)[:, None], -jnp.inf)
     c_all, d_all = _maxplus_reduce(c, d)
@@ -155,18 +177,31 @@ def _ga_window(spec: PlatformSpec, cfg: GAConfig, state: PlatformState,
 
 def _sa_window(spec: PlatformSpec, cfg: SAConfig, state: PlatformState,
                wtasks: TaskArrays, key: jax.Array) -> jax.Array:
-    """SA over ``cfg.chains`` vmapped annealing chains; best chain wins."""
+    """SA over ``cfg.chains`` vmapped annealing chains; best chain wins.
+
+    With ``cfg.tempering`` the chains become parallel-tempering replicas:
+    fixed per-chain temperatures on the geometric ladder plus periodic
+    adjacent-chain exchange moves (see :class:`SAConfig`).  The default
+    keeps the decaying-schedule Kirkpatrick chains bit-exactly (the
+    tempering branch is compiled out and the PRNG stream is untouched)."""
     w = wtasks.arrival.shape[0]
     c = cfg.chains
     fitness = jax.vmap(lambda a: window_fitness(spec, state, wtasks, a))
     k_init, k_loop = jax.random.split(key)
     cur = jax.random.randint(k_init, (c, w), 0, spec.n, jnp.int32)
     cur_fit = fitness(cur)
+    if cfg.tempering:
+        # chain 0 hottest -> chain c-1 coldest, fixed for the whole window
+        ladder = cfg.t_start * (cfg.t_end / cfg.t_start) ** (
+            jnp.arange(c, dtype=jnp.float32) / max(c - 1, 1))
 
     def it(i, carry):
         cur, cur_fit, best, best_fit, key = carry
-        frac = i.astype(jnp.float32) / max(cfg.iters - 1, 1)
-        temp = cfg.t_start * (cfg.t_end / cfg.t_start) ** frac
+        if cfg.tempering:
+            temp = ladder                                     # [c]
+        else:
+            frac = i.astype(jnp.float32) / max(cfg.iters - 1, 1)
+            temp = cfg.t_start * (cfg.t_end / cfg.t_start) ** frac
         key, k_pos, k_val, k_acc = jax.random.split(key, 4)
         pos = jax.random.randint(k_pos, (c,), 0, w)
         val = jax.random.randint(k_val, (c,), 0, spec.n, jnp.int32)
@@ -179,6 +214,26 @@ def _sa_window(spec: PlatformSpec, cfg: SAConfig, state: PlatformState,
         accept = (fit > cur_fit) | (jax.random.uniform(k_acc, (c,)) < p_acc)
         cur = jnp.where(accept[:, None], cand, cur)
         cur_fit = jnp.where(accept, fit, cur_fit)
+        if cfg.tempering:
+            # replica exchange: alternating even/odd adjacent pairs, the
+            # standard exp((beta_j - beta_k)(E_j - E_k)) swap acceptance
+            # with E = -fitness; one shared coin per pair (the left
+            # member's draw) so both sides take the same decision
+            key, k_ex = jax.random.split(key)
+            idx = jnp.arange(c)
+            parity = ((i + 1) // max(cfg.exchange_every, 1)) % 2
+            left = (idx % 2 == parity) & (idx < c - 1)
+            partner = jnp.where(left, idx + 1,
+                                jnp.where(jnp.roll(left, 1), idx - 1, idx))
+            beta = 1.0 / jnp.maximum(ladder, 1e-9)
+            delta = (beta - beta[partner]) * (cur_fit[partner] - cur_fit)
+            u = jax.random.uniform(k_ex, (c,))
+            u_pair = jnp.where(left, u, u[partner])
+            due = (i + 1) % max(cfg.exchange_every, 1) == 0
+            swap = ((u_pair < jnp.exp(jnp.minimum(delta, 0.0)))
+                    & (partner != idx) & due)
+            cur = jnp.where(swap[:, None], cur[partner], cur)
+            cur_fit = jnp.where(swap, cur_fit[partner], cur_fit)
         improved = cur_fit > best_fit
         best = jnp.where(improved[:, None], cur, best)
         best_fit = jnp.maximum(best_fit, cur_fit)
@@ -210,8 +265,13 @@ def _route_run(spec: PlatformSpec, cfg, search):
         task, a = x
         return platform_step(spec, state, task, a)
 
-    def win_body(carry, wtasks):
+    def win_body(carry, x):
+        wtasks, hrow = x
         state, key = carry
+        # windowed granularity contract (core.faults): the health row at
+        # the window's first task index holds for the whole window, so
+        # the search's fitness and the committed platform_steps agree
+        state = with_health(state, hrow)
         key, k_w = jax.random.split(key)
         best = search(spec, cfg, state, wtasks, k_w)
         # partial unroll only: the commit body is scatter-heavy and a
@@ -220,10 +280,14 @@ def _route_run(spec: PlatformSpec, cfg, search):
                                     unroll=6)
         return (state2, key), recs
 
-    def run(key, tasks: TaskArrays, state0: PlatformState | None = None):
+    def run(key, tasks: TaskArrays, state0: PlatformState | None = None,
+            health=None):
         win = window_task_arrays(tasks, window)
+        trace = (jnp.ones((tasks.arrival.shape[0], spec.n), jnp.float32)
+                 if health is None else jnp.asarray(health, jnp.float32))
         init = platform_init(spec.n) if state0 is None else state0
-        (state, _), recs = jax.lax.scan(win_body, (init, key), win)
+        (state, _), recs = jax.lax.scan(win_body, (init, key),
+                                        (win, window_health(trace, window)))
         recs = jax.tree_util.tree_map(
             lambda a: a.reshape(-1, *a.shape[2:]), recs)
         return state, recs
@@ -243,7 +307,13 @@ def make_metaheuristic_fn(spec: PlatformSpec, name: str, cfg=None,
     cfg = cfg_cls() if cfg is None else cfg
     run = _route_run(spec, cfg, search)
     if batched:
-        run = jax.vmap(run, in_axes=(0, 0))
+        single = run
+
+        def run(key, tasks, health=None):
+            if health is None:
+                return jax.vmap(single, in_axes=(0, 0))(key, tasks)
+            return jax.vmap(lambda k, t, h: single(k, t, health=h),
+                            in_axes=(0, 0, 0))(key, tasks, health)
     return jax.jit(run)
 
 

@@ -14,52 +14,73 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.platform_jax import (PlatformSpec, platform_init,
-                                     platform_step, spec_from_platform,
-                                     summarize)
+from repro.core.faults import window_health
+from repro.core.platform_jax import (PlatformSpec, health_capacity,
+                                     platform_init, platform_step,
+                                     spec_from_platform, summarize,
+                                     with_health)
 from repro.core.tasks import (TaskArrays, tasks_to_arrays,
                               window_task_arrays)
 
 
-def worst_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
-               alive=None):
-    """Everything onto one accelerator (the unscheduled worst case):
-    accelerator 0, or the first alive one under a fault mask."""
-    target = (jnp.int32(0) if alive is None
-              else jnp.argmax(alive).astype(jnp.int32))
+def _trace_or_ones(health, t: int, n: int):
+    """Default the optional [T, n] fault trace to all-healthy rows (which
+    the lookups divide by exactly 1.0 — a value-identical no-op)."""
+    return jnp.ones((t, n), jnp.float32) if health is None \
+        else jnp.asarray(health, jnp.float32)
 
-    def body(state, task):
+
+def worst_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
+               alive=None, health=None):
+    """Everything onto one accelerator (the unscheduled worst case):
+    accelerator 0, or the first alive one under a fault mask / at each
+    step of a ``health`` trace ([T, n], core.faults)."""
+    mask = jnp.ones((spec.n,), bool) if alive is None else alive
+
+    def body(state, x):
+        task, hrow = x
+        state = with_health(state, hrow)
+        target = jnp.argmax(mask & state.alive).astype(jnp.int32)
         return platform_step(spec, state, task, target)
 
     init = platform_init(spec.n) if state0 is None else state0
-    return jax.lax.scan(body, init, tasks)
+    trace = _trace_or_ones(health, tasks.arrival.shape[0], spec.n)
+    return jax.lax.scan(body, init, (tasks, trace))
 
 
 def ata_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
-             alive=None):
+             alive=None, health=None):
     """ATA: lowest-energy accelerator meeting the safety time; fastest
     response as the deadline-salvage fallback (mirrors ``ATAScheduler``).
     ``alive`` ([n] bool) drops dead accelerators from both argmins —
-    the graceful-degradation reroute of serve/durability.py."""
+    the graceful-degradation reroute of serve/durability.py — and a
+    ``health`` trace ([T, n]) additionally drops per-step failures and
+    inflates throttled cores' response/energy by 1/capacity."""
     mask = jnp.ones((spec.n,), bool) if alive is None else alive
 
-    def body(state, task):
+    def body(state, x):
+        task, hrow = x
+        state = with_health(state, hrow)
+        eff = health_capacity(state)
+        ok = mask & state.alive
         resp = (jnp.maximum(task.arrival, state.avail)
-                + spec.exec_time[:, task.kind] - task.arrival)
-        feasible = (resp <= task.safety) & mask
-        energy = spec.energy[:, task.kind]
+                + spec.exec_time[:, task.kind] / eff - task.arrival)
+        feasible = (resp <= task.safety) & ok
+        energy = spec.energy[:, task.kind] / eff
         a_feas = jnp.argmin(jnp.where(feasible, energy, jnp.inf))
         action = jnp.where(feasible.any(), a_feas,
-                           jnp.argmin(jnp.where(mask, resp, jnp.inf))
+                           jnp.argmin(jnp.where(ok, resp, jnp.inf))
                            ).astype(jnp.int32)
         return platform_step(spec, state, task, action)
 
     init = platform_init(spec.n) if state0 is None else state0
-    return jax.lax.scan(body, init, tasks)
+    trace = _trace_or_ones(health, tasks.arrival.shape[0], spec.n)
+    return jax.lax.scan(body, init, (tasks, trace))
 
 
 def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
-                window: int = 30, alive=None, incremental: bool = True):
+                window: int = 30, alive=None, incremental: bool = True,
+                health=None):
     """Windowed Min-Min as a nested scan.
 
     Outer scan walks windows of ``window`` tasks; the inner scan commits
@@ -67,6 +88,13 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
     completion time among unscheduled window rows, row-major tie-break like
     the NumPy loop.  Padding rows start pre-scheduled, and an all-scheduled
     window step degenerates to a masked no-op ``platform_step``.
+
+    A ``health`` trace ([T, n], core.faults) is sampled once per window —
+    the row at the window's first task index — and held constant while the
+    window commits (the windowed granularity contract: health constant
+    within a window keeps the incremental completion-time carry valid).
+    Dead cores' columns go to inf; throttled cores' completion times and
+    charged exec/energy inflate by 1/capacity.
 
     ``incremental=True`` (default) carries the ``[W, n]`` completion-time
     matrix through the inner scan instead of rebuilding it every step:
@@ -81,11 +109,15 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
     n = spec.n
     win = window_task_arrays(tasks, window)
     mask = jnp.ones((n,), bool) if alive is None else alive
+    whealth = window_health(
+        _trace_or_ones(health, tasks.arrival.shape[0], n), window)
 
     def ct_full(wtasks, state, scheduled):
+        eff = health_capacity(state)
+        ok = mask & state.alive
         ct = (jnp.maximum(wtasks.arrival[:, None], state.avail[None, :])
-              + spec.exec_time.T[wtasks.kind])            # [W, n]
-        ct = jnp.where(mask[None, :], ct, jnp.inf)
+              + spec.exec_time.T[wtasks.kind] / eff[None, :])  # [W, n]
+        ct = jnp.where(ok[None, :], ct, jnp.inf)
         return jnp.where(scheduled[:, None], jnp.inf, ct)
 
     def commit(wtasks, state, scheduled, ct):
@@ -106,13 +138,17 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
     def inner_inc(wtasks, carry, _):
         state, scheduled, ct = carry
         state2, scheduled2, ti, a, rec = commit(wtasks, state, scheduled, ct)
+        eff = health_capacity(state2)
         col = (jnp.maximum(wtasks.arrival, state2.avail[a])
-               + spec.exec_time[a, wtasks.kind])          # [W]
-        col = jnp.where(mask[a] & ~scheduled2, col, jnp.inf)
+               + spec.exec_time[a, wtasks.kind] / eff[a])  # [W]
+        col = jnp.where(mask[a] & state2.alive[a] & ~scheduled2,
+                        col, jnp.inf)
         ct2 = ct.at[ti, :].set(jnp.inf).at[:, a].set(col)
         return (state2, scheduled2, ct2), rec
 
-    def outer(state, wtasks):
+    def outer(state, x):
+        wtasks, hrow = x
+        state = with_health(state, hrow)
         sched0 = ~wtasks.valid
         if incremental:
             (state, _, _), recs = jax.lax.scan(
@@ -126,7 +162,7 @@ def minmin_scan(spec: PlatformSpec, tasks: TaskArrays, state0=None,
         return state, recs
 
     init = platform_init(n) if state0 is None else state0
-    final, recs = jax.lax.scan(outer, init, win)
+    final, recs = jax.lax.scan(outer, init, (win, whealth))
     recs = jax.tree_util.tree_map(lambda a: a.reshape(-1, *a.shape[2:]),
                                   recs)
     return final, recs

@@ -101,6 +101,10 @@ def run_qos_placement_serving(args) -> int:
               "format and fault-masked executors are single-stage)")
         return 1
     plat = HMAIPlatform(capacity_scale=args.rate_scale)
+    if args.inject_core is not None and not (0 <= args.inject_core < plat.n):
+        print(f"--inject-core {args.inject_core} out of range: the "
+              f"platform has {plat.n} accelerators (valid: 0..{plat.n - 1})")
+        return 1
     if args.stages > 1:
         # stage-level placement needs stage-shaped Q params
         from repro.core.pipeline import PipelineFlexAI

@@ -64,7 +64,13 @@ from repro.train import checkpoint as ckpt_lib
 from repro.train.fault_tolerance import (HeartbeatRecord, PreemptionGuard,
                                          StragglerDetector)
 
-SNAPSHOT_VERSION = 1
+SNAPSHOT_VERSION = 2
+
+# exec-time multiplier at/above which an injected fault counts as a dead
+# core: its heartbeats stop and the detector's dead-host arm fires.  Below
+# it the core is a *straggler* — it keeps heartbeating with an inflated
+# step time and the detector's threshold arm flags it instead.
+DEAD_CORE_FACTOR = 8.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +88,36 @@ class FaultInjection:
     core: int
     factor: float = 50.0
     handled: bool = True
+
+
+def injections_from_fault_events(events, svc_per_task: float, *,
+                                 handled: bool = True
+                                 ) -> list[FaultInjection]:
+    """Bridge the in-scan fault schedule (``core.faults.FaultEvent``) to
+    serving-time injections, so one seeded trace drives both the scan
+    engines and the serving layer.
+
+    A task-step index maps onto the virtual clock at which serving has
+    charged that many lockstep task slots (``step * svc_per_task``).
+    Trace factors are *capacity* (0.0 dead, (0, 1] fraction) while
+    injection factors are cumulative exec-time *multipliers*, so each
+    event emits the relative multiplier that moves the core from its
+    previous capacity to the new one — a recovery event divides the
+    earlier slowdown back out.  A dead-core event lands at the
+    ``HEALTH_FLOOR`` multiplier (1000x), well past ``DEAD_CORE_FACTOR``,
+    so it takes the heartbeat-silence arm exactly like a hand-written
+    ``FaultInjection(factor=50)``."""
+    from repro.core.platform_jax import HEALTH_FLOOR
+    cur: dict[int, float] = {}
+    out = []
+    for ev in sorted(events, key=lambda e: (e.step, e.core)):
+        prev = cur.get(ev.core, 1.0)
+        new = max(float(ev.factor), HEALTH_FLOOR)
+        cur[ev.core] = new
+        out.append(FaultInjection(at_time=ev.step * svc_per_task,
+                                  core=ev.core, factor=prev / new,
+                                  handled=handled))
+    return out
 
 
 def degrade_spec(healthy: PlatformSpec,
@@ -209,6 +245,7 @@ def pack_engine(eng: "DurableQoSEngine", inflight: Optional[Wave] = None,
         "completed": [req_meta(r) for r in eng.completed],
         "inflight": wave_meta(inflight) if inflight is not None else None,
         "alive": [bool(a) for a in eng.alive],
+        "health": [float(h) for h in eng.health],
         "core_factor": [float(f) for f in eng.core_factor],
         "fired": [_sanitize(ev) for ev in eng.fired],
         "pending_faults": [dataclasses.asdict(f)
@@ -326,6 +363,7 @@ def unpack_into(eng: "DurableQoSEngine", arrays: list, meta: dict) -> None:
     eng.svc = meta["svc"]
     eng.base_svc = meta["base_svc"]
     eng.svc_scale = meta["svc_scale"]
+    eng.svc_step = eng.svc / eng.cfg.stages
     eng.snapshots_written = meta["snapshots_written"]
     eng.wave_log = [list(w) for w in meta["wave_log"]]
     eng.dead_letter = [dict(d) for d in meta["dead_letter"]]
@@ -336,6 +374,7 @@ def unpack_into(eng: "DurableQoSEngine", arrays: list, meta: dict) -> None:
     eng._inflight = (wave_from(meta["inflight"])
                      if meta["inflight"] is not None else None)
     eng.alive = np.asarray(meta["alive"], bool)
+    eng.health = np.asarray(meta["health"], np.float64)
     eng.core_factor = np.asarray(meta["core_factor"], np.float64)
     eng.fired = [dict(ev) for ev in meta["fired"]]
     eng.pending_faults = [FaultInjection(**f)
@@ -439,8 +478,8 @@ class DurableQoSEngine(QoSPlacementEngine):
         self.core_factor = np.ones(n, np.float64)  # execution truth
         self.pending_faults = sorted(faults or [], key=lambda f: f.at_time)
         self.fired: list[dict] = []
-        self.base_svc = self.svc
-        self.svc_scale = 1.0
+        # base_svc / svc_scale / health live on the base engine now
+        # (the set_health admission seam); nothing extra to init here
         self.segments_done = 0
         self.snapshots_written = 0
         self.snapshot_time_s = 0.0  # sync time serving loses to pack/save
@@ -473,31 +512,62 @@ class DurableQoSEngine(QoSPlacementEngine):
     def _heartbeat_and_detect(self) -> None:
         seg_cost = self.cfg.chunk * self.svc
         for core in range(self.spec.n):
-            if self.core_factor[core] == 1.0:  # faulty cores go silent
+            f = self.core_factor[core]
+            if f == 1.0:
                 self.detector.record(HeartbeatRecord(
                     core, self.segments_done, seg_cost, self.now))
+            elif f < DEAD_CORE_FACTOR:
+                # a throttled core still makes progress: it heartbeats,
+                # but its step time is inflated by the degradation — the
+                # detector's threshold (straggler) arm fires instead of
+                # waiting out the dead-host timeout
+                self.detector.record(HeartbeatRecord(
+                    core, self.segments_done, seg_cost * f, self.now))
+            # else: a dead core goes silent -> dead_hosts() after timeout
         dead = set(self.detector.dead_hosts())
+        slow = set(self.detector.stragglers())
         for ev in self.fired:
-            if ev["core"] in dead and ev["detected_at"] is None:
+            if ev["detected_at"] is not None:
+                continue
+            core = ev["core"]
+            if core in dead:
                 ev["detected_at"] = self.now
                 if self.trace:
-                    print(f"DETECTED core={ev['core']} at={self.now:.4f}",
+                    print(f"DETECTED core={core} at={self.now:.4f}",
                           flush=True)
                 if ev["handled"]:
-                    self._mitigate(ev["core"])
+                    self._mitigate(core)
+            elif core in slow and 1.0 < self.core_factor[core]:
+                ev["detected_at"] = self.now
+                if self.trace:
+                    print(f"STRAGGLER core={core} at={self.now:.4f}",
+                          flush=True)
+                if ev["handled"]:
+                    self._mitigate_degraded(core, self.core_factor[core])
 
     def _mitigate(self, core: int) -> None:
-        """Graceful degradation: drop the core from the placement argmax
-        and stretch the lockstep service cost to the surviving capacity —
-        shedding then naturally drops what no longer fits."""
+        """Dead-core mitigation: drop the core from the placement argmax
+        and shrink admission capacity through the shared ``set_health``
+        seam — shedding then naturally drops what no longer fits."""
         self.alive[core] = False
-        et = np.asarray(self.healthy_spec.exec_time, np.float64)
-        cap = 1.0 / et.mean(axis=1)
-        self.svc_scale = float(cap.sum() / max(cap[self.alive].sum(), 1e-12))
-        self.svc = self.base_svc * self.svc_scale
+        h = np.array(self.health, np.float64)
+        h[core] = 0.0
+        self.set_health(h)
         if self.trace:
             print(f"MITIGATE core={core} svc_scale={self.svc_scale:.4f}",
                   flush=True)
+
+    def _mitigate_degraded(self, core: int, factor: float) -> None:
+        """Straggler mitigation: the core stays in the placement argmax
+        (it still makes progress) but admission sees its shrunken
+        capacity, so the stretched service cost sheds marginal routes
+        instead of letting the slow core turn them into deadline misses."""
+        h = np.array(self.health, np.float64)
+        h[core] = min(h[core], 1.0 / max(float(factor), 1.0))
+        self.set_health(h)
+        if self.trace:
+            print(f"MITIGATE-DEGRADED core={core} health={h[core]:.3f} "
+                  f"svc_scale={self.svc_scale:.4f}", flush=True)
 
     # ---- durability seams ----------------------------------------------
 

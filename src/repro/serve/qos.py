@@ -245,6 +245,9 @@ class QoSPlacementEngine:
         # svc/stages so a wave's total service matches its unpipelined
         # twin up to the (S-1)-column drain bubble
         self.svc_step = self.svc / cfg.stages
+        self.base_svc = self.svc
+        self.svc_scale = 1.0
+        self.health = np.ones(self.spec.n, np.float64)
         self.plan = None
         if cfg.stages > 1:
             if executor is not None:
@@ -290,10 +293,30 @@ class QoSPlacementEngine:
     def _service_need(self, bucket: int) -> float:
         """Virtual service time a bucket will be charged end to end —
         what shedding and preemption decisions compare against deadlines
-        (identical to ``bucket * svc`` when stages == 1)."""
+        (identical to ``bucket * svc`` when stages == 1).  ``set_health``
+        stretches ``svc``, so a degraded pool's need grows and admission
+        sheds what no longer fits *before* dispatch."""
         if self.cfg.stages > 1:
             return self._flat_len(bucket) * self.svc_step
         return bucket * self.svc
+
+    def set_health(self, health) -> None:
+        """Degradation-aware admission: install a per-core health row
+        (``core.faults`` semantics — 0.0 dead, (0, 1] capacity fraction)
+        and stretch the virtual service cost by the lost throughput.
+        The lockstep wave only moves as fast as the pool's surviving
+        capacity, so effective service time scales by
+        total-capacity / health-weighted-capacity; ``_service_need``
+        then reflects what the degraded pool can actually deliver and
+        timeout shedding fires ahead of doomed dispatches.  An all-ones
+        row restores the healthy cost exactly."""
+        self.health = np.asarray(health, np.float64)
+        et = np.asarray(self.spec.exec_time, np.float64)
+        cap = 1.0 / et.mean(axis=1)          # per-core healthy throughput
+        eff = float((cap * self.health).sum())
+        self.svc_scale = float(cap.sum()) / max(eff, 1e-12)
+        self.svc = self.base_svc * self.svc_scale
+        self.svc_step = self.svc / self.cfg.stages
 
     def submit(self, tasks, arrival: float = 0.0,
                deadline: Optional[float] = None) -> RouteRequest:

@@ -20,6 +20,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -150,11 +151,22 @@ class AsyncCheckpointer:
     and ``save()`` costs only the submission.  The caller owns
     consistency — every leaf the callable closes over must be immutable
     (jax arrays are; host arrays must not be mutated in place).
+
+    Disk writes retry transient ``OSError`` up to ``retries`` times with
+    exponential backoff (``backoff_s * 2**attempt``): a blip on a network
+    filesystem must not silently kill the snapshot thread — before the
+    retry loop, one ``ENOSPC`` hiccup meant every later ``save`` wrote
+    nothing and the failure only surfaced at the next ``wait()``.  The
+    atomic tmp-dir protocol makes a failed attempt restartable: the
+    partial ``.tmp`` is wiped at the top of ``_write``.
     """
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, *,
+                 retries: int = 3, backoff_s: float = 0.05):
         self.directory = directory
         self.keep = keep
+        self.retries = retries
+        self.backoff_s = backoff_s
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -179,9 +191,16 @@ class AsyncCheckpointer:
                     if names is None:
                         n, leaves, _ = _flatten_with_names(state())
                         h = [np.asarray(jax.device_get(x)) for x in leaves]
-                        _write(self.directory, step, n, h)
                     else:
-                        _write(self.directory, step, names, host)
+                        n, h = names, host
+                    for attempt in range(self.retries + 1):
+                        try:
+                            _write(self.directory, step, n, h)
+                            break
+                        except OSError:
+                            if attempt == self.retries:
+                                raise
+                            time.sleep(self.backoff_s * (2 ** attempt))
                     self._gc()
                 except BaseException as e:  # surfaced on next wait()
                     self._error = e

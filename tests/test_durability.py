@@ -29,10 +29,11 @@ import pytest
 from repro.core.flexai import FlexAIAgent, FlexAIConfig
 from repro.core.hmai import HMAIPlatform
 from repro.core.tasks import TaskArrays, pad_route_batch
-from repro.serve.durability import (DurableQoSEngine, FaultInjection,
-                                    decode_snapshot, digests_equal,
-                                    encode_snapshot, pack_engine,
-                                    serving_digest)
+from repro.serve.durability import (DEAD_CORE_FACTOR, DurableQoSEngine,
+                                    FaultInjection, decode_snapshot,
+                                    digests_equal, encode_snapshot,
+                                    injections_from_fault_events,
+                                    pack_engine, serving_digest)
 from repro.serve.qos import QoSConfig
 from repro.train import checkpoint as ckpt_lib
 
@@ -219,6 +220,134 @@ def test_fault_graceful_degradation_contract(fixed_seed):
     assert sh["miss_rate"] < su["miss_rate"]
     # and an unhandled fault honestly pays the degraded core's overrun
     assert unhandled.now > ref.now
+
+
+def test_straggler_mitigation_keeps_core_in_argmax(fixed_seed):
+    """A throttled core (factor below DEAD_CORE_FACTOR) keeps
+    heartbeating with its step time inflated by the degradation: the
+    detector's threshold (straggler) arm flags it, admission capacity
+    shrinks through the shared ``set_health`` seam, but the core stays
+    in the placement argmax — it still makes progress."""
+    assert 3.0 < DEAD_CORE_FACTOR
+    eng = _engine("stub",
+                  faults=[FaultInjection(at_time=0.0, core=1, factor=3.0)],
+                  dead_after_segments=1)
+    _submit(eng, 6, seed=fixed_seed)
+    eng.run_until_done()
+    s = eng.stats()
+    assert s["faults_fired"] == 1
+    assert eng.fired[0]["detected_at"] is not None
+    assert s["cores_masked"] == 0 and eng.alive.all()
+    assert eng.health[1] == pytest.approx(1.0 / 3.0)
+    assert s["svc_scale"] > 1.0
+
+
+def test_dead_core_health_belief_zeroed(fixed_seed):
+    """Dead-core mitigation routes through ``set_health`` too: the
+    belief row shows the core at zero capacity and the svc stretch
+    matches the old alive-mask formula (total / surviving capacity)."""
+    eng = _engine("stub",
+                  faults=[FaultInjection(at_time=0.0, core=2, factor=50.0)],
+                  dead_after_segments=1)
+    _submit(eng, 6, seed=fixed_seed)
+    eng.run_until_done()
+    assert not eng.alive[2] and eng.health[2] == 0.0
+    et = np.asarray(eng.healthy_spec.exec_time, np.float64)
+    cap = 1.0 / et.mean(axis=1)
+    assert eng.svc_scale == pytest.approx(
+        cap.sum() / cap[eng.alive].sum())
+
+
+def test_injections_from_fault_events_bridge():
+    """The in-scan schedule maps onto serving injections: step -> virtual
+    time, capacity -> relative exec multiplier, recovery divides the
+    slowdown back out, and a dead core lands past DEAD_CORE_FACTOR."""
+    from repro.core.faults import FaultEvent
+    from repro.core.platform_jax import HEALTH_FLOOR
+    svc = 0.01
+    events = [FaultEvent(step=4, core=2, factor=0.0),
+              FaultEvent(step=2, core=1, factor=0.5),
+              FaultEvent(step=9, core=1, factor=1.0)]
+    inj = injections_from_fault_events(events, svc)
+    assert [f.at_time for f in inj] == [2 * svc, 4 * svc, 9 * svc]
+    assert [f.core for f in inj] == [1, 2, 1]
+    # capacity 0.5 -> 2x exec; the recovery event cancels it cumulatively
+    assert inj[0].factor == pytest.approx(2.0)
+    assert inj[0].factor * inj[2].factor == pytest.approx(1.0)
+    assert inj[1].factor == pytest.approx(1.0 / HEALTH_FLOOR)
+    assert inj[1].factor >= DEAD_CORE_FACTOR
+
+
+def test_seeded_schedule_drives_serving(fixed_seed):
+    """One seeded ``core.faults`` schedule drives the serving layer end
+    to end: faults fire, and conservation holds through fault-induced
+    degradation (every uid completed or dead-lettered)."""
+    from repro.core.faults import random_fault_events
+    events = random_fault_events(fixed_seed, n_steps=64,
+                                 n_cores=_PLATFORM.n, n_faults=2)
+    probe = _engine("stub")
+    eng = _engine("stub",
+                  faults=injections_from_fault_events(events, probe.svc),
+                  dead_after_segments=1)
+    n_req = 8
+    _submit(eng, n_req, seed=fixed_seed, tight=True)
+    eng.run_until_done()
+    assert eng.stats()["faults_fired"] >= 1
+    done = [r.uid for r in eng.completed]
+    shed = [d["uid"] for d in eng.dead_letter]
+    assert sorted(done + shed) == list(range(n_req))
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer retry-with-backoff (flaky filesystem)
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_retries_transient_oserror(tmp_path, monkeypatch):
+    """Two transient disk failures, then success: the snapshot thread
+    survives and the checkpoint lands (before the retry loop, the first
+    OSError silently killed the write and only surfaced at wait())."""
+    calls = {"n": 0}
+    real = ckpt_lib._write
+
+    def flaky(directory, step, names, host):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("transient filesystem blip")
+        return real(directory, step, names, host)
+
+    monkeypatch.setattr(ckpt_lib, "_write", flaky)
+    saver = ckpt_lib.AsyncCheckpointer(str(tmp_path), retries=3,
+                                       backoff_s=0.0)
+    saver.save(1, {"w": np.arange(4.0)})
+    saver.wait()  # must not raise
+    assert calls["n"] == 3
+    path = ckpt_lib.latest_checkpoint(str(tmp_path))
+    assert path is not None and ckpt_lib.checkpoint_step(path) == 1
+
+
+def test_async_checkpointer_exhausted_retries_surface(tmp_path, monkeypatch):
+    """A persistent failure still surfaces on wait() after the bounded
+    retries run out — durability never hides a genuinely broken disk."""
+    def broken(directory, step, names, host):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_lib, "_write", broken)
+    saver = ckpt_lib.AsyncCheckpointer(str(tmp_path), retries=2,
+                                       backoff_s=0.0)
+    saver.save(1, {"w": np.zeros(2)})
+    with pytest.raises(OSError, match="disk full"):
+        saver.wait()
+
+
+def test_inject_core_validated_against_platform(capsys):
+    """--inject-core outside the platform's accelerator range is refused
+    up front instead of constructing an engine that faults a phantom
+    core."""
+    from repro.launch.serve import main
+    assert main(["--placement", "--routes", "1", "--inject-core", "99"]) == 1
+    assert "out of range" in capsys.readouterr().out
+    assert main(["--placement", "--routes", "1", "--inject-core", "-1"]) == 1
+    assert "out of range" in capsys.readouterr().out
 
 
 # ---------------------------------------------------------------------------

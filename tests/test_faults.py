@@ -1,0 +1,328 @@
+"""In-scan fault model: trace construction, health-aware engines, and the
+bit-exact fused-vs-task-major-replay parity contract (ISSUE 8).
+
+The reference semantics of a fault trace is ``faults.replay_actions``:
+one ``platform_step`` per task in stream order with the trace row
+installed first.  Every fused engine that emits records in task order
+(worst/ATA/FlexAI/GA/SA, and the pipeline wavefront vs its task-major
+reference) must reproduce it exactly under the same trace.  Min-Min
+commits in completion-time order, not task order, so its contract is the
+incremental-vs-rebuild equality plus a NumPy replication of the
+window-level decisions driving eager ``platform_step`` commits.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.environment import EnvironmentParams, build_task_queue
+from repro.core.faults import (FaultEvent, build_health_trace, healthy_trace,
+                               random_fault_events, replay_actions,
+                               window_health)
+from repro.core.flexai import FlexAIConfig
+from repro.core.flexai.dqn import init_qnet
+from repro.core.flexai.engine import (make_schedule_fn, make_train_fn,
+                                      train_init)
+from repro.core.hmai import HMAIPlatform
+from repro.core.pipeline import (build_stage_plan,
+                                 make_pipeline_reference_fn,
+                                 make_pipeline_schedule_fn, stage_state_dim)
+from repro.core.platform_jax import (HEALTH_FLOOR, health_capacity,
+                                     platform_init, spec_from_platform,
+                                     state_from_platform, with_health)
+from repro.core.schedulers.metaheuristic_jax import (GAConfig, SAConfig,
+                                                     _sa_window,
+                                                     make_metaheuristic_fn,
+                                                     window_fitness)
+from repro.core.schedulers.scan import ata_scan, minmin_scan, worst_scan
+from repro.core.tasks import tasks_to_arrays, window_task_arrays
+
+RS = 0.05
+
+
+def _queue(seed, km=0.06):
+    return build_task_queue(EnvironmentParams(
+        route_km=km, rate_scale=RS, seed=seed, max_times_turn=2,
+        max_times_reverse=1, max_duration_turn=4.0,
+        max_duration_reverse=6.0))
+
+
+def _platform():
+    return HMAIPlatform(capacity_scale=RS)
+
+
+def _setup(seed=11, fault_seed=5):
+    plat = _platform()
+    spec = spec_from_platform(plat)
+    ta = tasks_to_arrays(_queue(seed))
+    t = ta.arrival.shape[0]
+    events = random_fault_events(fault_seed, t, plat.n, n_faults=2)
+    trace = build_health_trace(t, plat.n, events)
+    return plat, spec, ta, trace
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# trace construction
+# ---------------------------------------------------------------------------
+
+def test_build_health_trace_carry_forward():
+    tr = build_health_trace(6, 3, [FaultEvent(2, 1, 0.0),
+                                   FaultEvent(4, 1, 1.0),
+                                   FaultEvent(3, 0, 0.5)])
+    assert tr.shape == (6, 3)
+    np.testing.assert_array_equal(tr[:, 2], np.ones(6))      # untouched
+    np.testing.assert_array_equal(tr[:, 1], [1, 1, 0, 0, 1, 1])
+    np.testing.assert_array_equal(tr[:, 0], [1, 1, 1, .5, .5, .5])
+
+
+def test_build_health_trace_rejects_bad_core():
+    with pytest.raises(ValueError):
+        build_health_trace(4, 2, [FaultEvent(0, 2, 0.0)])
+
+
+def test_random_fault_events_deterministic_with_survivor():
+    ev1 = random_fault_events(9, 100, 6, n_faults=3)
+    ev2 = random_fault_events(9, 100, 6, n_faults=3)
+    assert ev1 == ev2
+    # n_faults clamps below n_cores: some core never appears in a schedule
+    ev = random_fault_events(3, 100, 4, n_faults=99, recover=False)
+    assert len({e.core for e in ev}) <= 3
+    tr = build_health_trace(100, 4, ev)
+    assert (tr > 0.0).any(axis=1).all()                      # a survivor per row
+
+
+def test_window_health_samples_window_starts():
+    tr = np.arange(14, dtype=np.float32).reshape(7, 2)
+    wh = np.asarray(window_health(tr, 3))
+    assert wh.shape == (3, 2)
+    np.testing.assert_array_equal(wh[0], tr[0])
+    np.testing.assert_array_equal(wh[1], tr[3])
+    np.testing.assert_array_equal(wh[2], tr[6])              # tail pad row
+
+
+def test_with_health_semantics():
+    state = platform_init(4)
+    s = with_health(state, jnp.asarray([1.0, 0.5, 0.0, 1.0]))
+    np.testing.assert_array_equal(np.asarray(s.alive),
+                                  [True, True, False, True])
+    eff = np.asarray(health_capacity(s))
+    np.testing.assert_allclose(eff, [1.0, 0.5, HEALTH_FLOOR, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# healthy trace == no trace (the bit-exact no-regression identity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", [worst_scan, ata_scan, minmin_scan])
+def test_healthy_trace_is_identity(engine):
+    plat, spec, ta, _ = _setup()
+    ones = healthy_trace(ta.arrival.shape[0], plat.n)
+    f_none, r_none = jax.jit(engine)(spec, ta)
+    f_ones, r_ones = jax.jit(functools.partial(engine, health=ones))(spec, ta)
+    _assert_tree_equal(r_none, r_ones)
+    _assert_tree_equal(f_none, f_ones)
+
+
+# ---------------------------------------------------------------------------
+# fused fault-trace runs vs the task-major replay (bit-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", [worst_scan, ata_scan])
+def test_heuristic_replay_parity(engine):
+    plat, spec, ta, trace = _setup()
+    final, recs = jax.jit(functools.partial(engine, health=trace))(spec, ta)
+    rfinal, rrecs = replay_actions(spec, ta, recs.action, trace)
+    _assert_tree_equal(recs, rrecs)
+    _assert_tree_equal(final, rfinal)
+
+
+def test_flexai_replay_parity():
+    plat, spec, ta, trace = _setup()
+    params = init_qnet(jax.random.PRNGKey(2), 3 + 5 * plat.n, plat.n)
+    fn = make_schedule_fn(spec)
+    final, recs = fn(params, ta, health=trace)
+    rfinal, rrecs = replay_actions(spec, ta, recs.action, trace)
+    _assert_tree_equal(recs, rrecs)
+    _assert_tree_equal(final, rfinal)
+
+
+@pytest.mark.parametrize("name,cfg", [
+    ("ga", GAConfig(population=8, generations=3)),
+    ("sa", SAConfig(iters=30, chains=4)),
+    ("sa", SAConfig(iters=30, chains=4, tempering=True, exchange_every=5)),
+])
+def test_metaheuristic_replay_parity(name, cfg):
+    plat, spec, ta, trace = _setup()
+    fn = make_metaheuristic_fn(spec, name, cfg)
+    final, recs = fn(jax.random.PRNGKey(0), ta, health=trace)
+    # windowed engines hold the window-start health row for the whole
+    # window: the replay's per-task trace is the window-expanded one, over
+    # the same zero-padded task stream the window reshape produced
+    win = window_task_arrays(ta, cfg.window)
+    flat = jax.tree_util.tree_map(
+        lambda a: a.reshape(-1, *a.shape[2:]), win)
+    wtrace = np.repeat(np.asarray(window_health(trace, cfg.window)),
+                       cfg.window, axis=0)
+    rfinal, rrecs = replay_actions(spec, flat, recs.action, wtrace)
+    _assert_tree_equal(recs, rrecs)
+    _assert_tree_equal(final, rfinal)
+
+
+def test_minmin_incremental_matches_rebuild_under_trace():
+    plat, spec, ta, trace = _setup()
+    f_inc, r_inc = jax.jit(functools.partial(
+        minmin_scan, incremental=True, health=trace))(spec, ta)
+    f_reb, r_reb = jax.jit(functools.partial(
+        minmin_scan, incremental=False, health=trace))(spec, ta)
+    _assert_tree_equal(r_inc, r_reb)
+    _assert_tree_equal(f_inc, f_reb)
+
+
+def test_minmin_window_decisions_match_numpy_reference():
+    """Replicate the window-level Min-Min decision rule in NumPy f32 —
+    same ``max(arrival, avail) + exec/eff`` expression, same row-major
+    flat-argmin tie-break — driving eager ``platform_step`` commits, and
+    demand the fused run's records match bit-exactly."""
+    from repro.core.platform_jax import platform_step
+
+    plat, spec, ta, trace = _setup()
+    window = 30
+    final, recs = jax.jit(functools.partial(
+        minmin_scan, window=window, health=trace))(spec, ta)
+
+    win = window_task_arrays(ta, window)
+    wh = np.asarray(window_health(trace, window))
+    exec_t = np.asarray(spec.exec_time, np.float32)
+    n = plat.n
+    step = jax.jit(platform_step)
+    state = platform_init(n)
+    ref_actions, ref_valid = [], []
+    for w in range(np.asarray(win.arrival).shape[0]):
+        wtasks = jax.tree_util.tree_map(lambda a, w=w: a[w], win)
+        state = with_health(state, jnp.asarray(wh[w]))
+        eff = np.asarray(health_capacity(state), np.float32)
+        alive = np.asarray(state.alive, bool)
+        arrival = np.asarray(wtasks.arrival, np.float32)
+        kind = np.asarray(wtasks.kind)
+        scheduled = ~np.asarray(wtasks.valid, bool)
+        for _ in range(window):
+            avail = np.asarray(state.avail, np.float32)
+            ct = (np.maximum(arrival[:, None], avail[None, :])
+                  + exec_t.T[kind] / eff[None, :]).astype(np.float32)
+            ct[:, ~alive] = np.inf
+            ct[scheduled, :] = np.inf
+            flat = int(np.argmin(ct))
+            ti, a = flat // n, flat % n
+            ok = not scheduled[ti]
+            task_i = jax.tree_util.tree_map(lambda x, ti=ti: x[ti], wtasks)
+            state, rec = step(spec, state, task_i,
+                              jnp.int32(a), valid=jnp.bool_(ok))
+            scheduled[ti] = True
+            ref_actions.append(int(rec.action))
+            ref_valid.append(bool(rec.valid))
+    np.testing.assert_array_equal(np.asarray(recs.action), ref_actions)
+    np.testing.assert_array_equal(np.asarray(recs.valid, bool), ref_valid)
+    # decisions are the bit-exact contract; the per-commit-jitted state
+    # accumulators may differ from the fused scan's by an ulp
+    for x, y in zip(jax.tree_util.tree_leaves(final),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("policy", ["eft", "flexai"])
+def test_pipeline_two_stage_parity_under_trace(policy):
+    plat, spec, ta, trace = _setup()
+    plan = build_stage_plan(plat, 2)
+    params = init_qnet(jax.random.PRNGKey(4), stage_state_dim(plat.n),
+                       plat.n)
+    fused = make_pipeline_schedule_fn(spec, plan, policy=policy)
+    ref = make_pipeline_reference_fn(spec, plan, policy=policy)
+    f1, ring1, r1 = fused(params, ta, health=trace)
+    f2, ring2, r2 = ref(params, ta, health=trace)
+    _assert_tree_equal(r1, r2)
+    np.testing.assert_array_equal(np.asarray(ring1), np.asarray(ring2))
+    _assert_tree_equal(f1, f2)
+
+
+# ---------------------------------------------------------------------------
+# rerouting: no valid placement ever lands on a dead core
+# ---------------------------------------------------------------------------
+
+def _dead_core_trace(t, n, core=0):
+    return build_health_trace(t, n, [FaultEvent(0, core, 0.0)])
+
+
+def test_engines_avoid_dead_core():
+    plat, spec, ta, _ = _setup()
+    t = ta.arrival.shape[0]
+    trace = _dead_core_trace(t, plat.n, core=1)
+    for engine in (worst_scan, ata_scan, minmin_scan):
+        final, recs = jax.jit(functools.partial(
+            engine, health=trace))(spec, ta)
+        acts = np.asarray(recs.action)[np.asarray(recs.valid, bool)]
+        assert (acts != 1).all(), engine
+    params = init_qnet(jax.random.PRNGKey(2), 3 + 5 * plat.n, plat.n)
+    _, recs = make_schedule_fn(spec)(params, ta, health=trace)
+    acts = np.asarray(recs.action)[np.asarray(recs.valid, bool)]
+    assert (acts != 1).all()
+
+
+def test_degradation_trainer_masks_greedy_arm():
+    """eps=0 training under a dead-core trace: every (greedy) action must
+    avoid the dead core, and the trainer still learns (runs updates)."""
+    plat = _platform()
+    spec = spec_from_platform(plat)
+    ta = tasks_to_arrays(_queue(13))
+    t = ta.arrival.shape[0]
+    trace = _dead_core_trace(t, plat.n, core=2)
+    cfg = FlexAIConfig(seed=0, eps_start=0.0, eps_end=0.0)
+    ts = train_init(jax.random.PRNGKey(0), 3 + 5 * plat.n, plat.n,
+                    cfg.replay_capacity)
+    fn = make_train_fn(spec, cfg)
+    ts2, plat_f, recs, losses, upd = fn(ts, ta, health=trace)
+    acts = np.asarray(recs.action)[np.asarray(recs.valid, bool)]
+    assert (acts != 2).all()
+    assert np.asarray(upd).any()
+
+
+# ---------------------------------------------------------------------------
+# parallel tempering vs Kirkpatrick chains (window-level, fixed seeds)
+# ---------------------------------------------------------------------------
+
+def test_parallel_tempering_window_quality():
+    """At an equal iteration budget the tempered chains' best window
+    fitness should track the Kirkpatrick chains' (deterministic at fixed
+    seeds; mean over seeds within a small slack — exchange moves buy
+    mixing, not a guaranteed per-seed win)."""
+    plat = _platform()
+    spec = spec_from_platform(plat)
+    ta = tasks_to_arrays(_queue(17))
+    wtasks = jax.tree_util.tree_map(lambda a: a[:30], ta)
+    state = state_from_platform(plat)
+    plain = SAConfig(iters=60, chains=8)
+    temper = SAConfig(iters=60, chains=8, tempering=True, exchange_every=5)
+    fits = {"plain": [], "pt": []}
+    for seed in range(4):
+        key = jax.random.PRNGKey(seed)
+        for label, cfg in (("plain", plain), ("pt", temper)):
+            best = _sa_window(spec, cfg, state, wtasks, key)
+            fits[label].append(float(window_fitness(
+                spec, state, wtasks, best)))
+    # determinism: same seed, same config -> same assignment
+    again = _sa_window(spec, temper, state, wtasks, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(
+        np.asarray(again),
+        np.asarray(_sa_window(spec, temper, state, wtasks,
+                              jax.random.PRNGKey(0))))
+    mean_plain = np.mean(fits["plain"])
+    mean_pt = np.mean(fits["pt"])
+    assert mean_pt >= mean_plain - 0.05 * abs(mean_plain), fits

@@ -1,0 +1,118 @@
+"""Scenario generator: family semantics, determinism, and engine feed."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.environment import EnvironmentParams, build_task_queue
+from repro.core.flexai.dqn import init_qnet
+from repro.core.flexai.engine import make_schedule_fn
+from repro.core.hmai import HMAIPlatform
+from repro.core.platform_jax import spec_from_platform, summarize
+from repro.core.scenarios import (FAMILIES, scenario_batch,
+                                  scenario_lane_batches)
+from repro.core.tasks import tasks_to_arrays
+
+RS = 0.05
+
+
+def _base(seed=21, km=0.06):
+    return tasks_to_arrays(build_task_queue(EnvironmentParams(
+        route_km=km, rate_scale=RS, seed=seed, max_times_turn=2,
+        max_times_reverse=1, max_duration_turn=4.0,
+        max_duration_reverse=6.0)))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    plat = HMAIPlatform(capacity_scale=RS)
+    return _base(), scenario_batch(_base(), plat.n, seed=3, n_per_family=4)
+
+
+def test_batch_shapes_and_determinism(batch):
+    base, b = batch
+    t = base.arrival.shape[0]
+    n = HMAIPlatform(capacity_scale=RS).n
+    assert b.num_scenarios == 4 * len(FAMILIES)
+    assert b.tasks.arrival.shape == (b.num_scenarios, t)
+    assert b.health.shape == (b.num_scenarios, t, n)
+    b2 = scenario_batch(_base(), n, seed=3, n_per_family=4)
+    for x, y in zip(jax.tree_util.tree_leaves(b.tasks),
+                    jax.tree_util.tree_leaves(b2.tasks)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(b.health),
+                                  np.asarray(b2.health))
+    b3 = scenario_batch(_base(), n, seed=4, n_per_family=4)
+    assert not np.array_equal(np.asarray(b.health), np.asarray(b3.health))
+
+
+def test_clean_family_is_base(batch):
+    base, b = batch
+    for r in b.family_rows("clean"):
+        np.testing.assert_array_equal(np.asarray(b.tasks.arrival[r]),
+                                      np.asarray(base.arrival))
+        np.testing.assert_array_equal(np.asarray(b.tasks.valid[r]),
+                                      np.asarray(base.valid))
+        assert np.all(np.asarray(b.health[r]) == 1.0)
+
+
+def test_sensor_dropout_keeps_front_center(batch):
+    base, b = batch
+    group = np.asarray(base.group)
+    bvalid = np.asarray(base.valid)
+    dropped_any = False
+    for r in b.family_rows("sensor_dropout"):
+        valid = np.asarray(b.tasks.valid[r])
+        # front-center tasks always survive; drops are whole-group
+        np.testing.assert_array_equal(valid[(group == 0) & bvalid],
+                                      True)
+        assert not np.any(valid & ~bvalid)   # never resurrects padding
+        dropped_any |= bool(np.any(bvalid & ~valid))
+    assert dropped_any
+
+
+def test_weather_and_burst_preserve_order(batch):
+    base, b = batch
+    changed = {"weather": False, "burst": False}
+    for fam in ("weather", "burst"):
+        for r in b.family_rows(fam):
+            arr = np.asarray(b.tasks.arrival[r])
+            assert np.all(np.diff(arr) >= 0.0), fam
+            changed[fam] |= not np.array_equal(arr,
+                                               np.asarray(base.arrival))
+    assert changed["weather"] and changed["burst"]
+
+
+def test_fault_family_traces(batch):
+    _, b = batch
+    rows = b.family_rows("fault")
+    hit = False
+    for r in rows:
+        tr = np.asarray(b.health[r])
+        assert ((tr >= 0.0) & (tr <= 1.0)).all()
+        assert (tr > 0.0).any(axis=1).all()      # a survivor every step
+        hit |= bool((tr < 1.0).any())
+    assert hit
+
+
+def test_lane_batches_shapes(batch):
+    _, b = batch
+    lanes = 4
+    got = list(scenario_lane_batches(b, lanes))
+    assert len(got) == b.num_scenarios // lanes
+    tasks, health = got[0]
+    assert tasks.arrival.shape[0] == lanes
+    assert health.shape[0] == lanes
+
+
+def test_batched_engine_consumes_scenarios(batch):
+    """The whole fleet schedules in one batched dispatch, traces and all."""
+    _, b = batch
+    plat = HMAIPlatform(capacity_scale=RS)
+    spec = spec_from_platform(plat)
+    params = init_qnet(jax.random.PRNGKey(0), 3 + 5 * plat.n, plat.n)
+    fn = make_schedule_fn(spec, batched=True)
+    finals, recs = fn(params, b.tasks, health=b.health)
+    assert recs.valid.shape[0] == b.num_scenarios
+    s0 = summarize(spec, jax.tree_util.tree_map(lambda a: a[0], finals),
+                   jax.tree_util.tree_map(lambda a: a[0], recs))
+    assert 0.0 <= s0["stm_rate"] <= 1.0

@@ -40,7 +40,8 @@ except ImportError:
 from repro.core.hmai import HMAIPlatform
 from repro.core.flexai import FlexAIAgent, FlexAIConfig
 from repro.core.tasks import TaskArrays
-from repro.serve.durability import DurableQoSEngine, pack_engine
+from repro.serve.durability import (DurableQoSEngine, FaultInjection,
+                                    pack_engine)
 from repro.serve.qos import COMPLETED, QoSConfig, QoSPlacementEngine, SHED
 
 MAX_EXAMPLES = int(os.environ.get("SERVE_QOS_EXAMPLES", "30"))
@@ -129,6 +130,68 @@ def check_crash_replay_conservation(policy, slots, kill_after, jobs, seed):
     assert all(r.status == COMPLETED for r in resumed.completed)
     s = resumed.stats()
     assert s["completed"] + s["shed"] == len(jobs)
+
+
+ADVERSARIAL_KINDS = ("bursty", "duplicate", "inverted")
+
+
+def _adversarial_jobs(kind, n_jobs, seed):
+    """Adversarial arrival streams as (n_tasks, arrival, budget) tuples:
+    ``bursty`` collapses every arrival onto a few shared instants,
+    ``duplicate`` replays one identical submission n times, and
+    ``inverted`` hands later arrivals strictly earlier absolute
+    deadlines (the anti-EDF ordering)."""
+    rng = np.random.default_rng(seed)
+    if kind == "bursty":
+        instants = rng.uniform(0.0, 0.2, max(1, n_jobs // 4))
+        return [(int(rng.integers(1, 41)), float(rng.choice(instants)),
+                 float(rng.uniform(0.005, 0.6))) for _ in range(n_jobs)]
+    if kind == "duplicate":
+        job = (int(rng.integers(1, 41)), float(rng.uniform(0.0, 0.1)),
+               float(rng.uniform(0.005, 0.6)))
+        return [job] * n_jobs
+    arrivals = np.sort(rng.uniform(0.0, 0.4, n_jobs))
+    latest = float(arrivals[-1])
+    # budget shrinks faster than arrival grows, so the absolute deadline
+    # (arrival + budget) strictly decreases as arrival increases
+    return [(int(rng.integers(1, 41)), float(a),
+             float(2.2 * (latest - a) + 0.01)) for a in arrivals]
+
+
+def check_adversarial_conservation(kind, policy, slots, n_jobs, seed):
+    """Conservation must survive adversarial arrival shapes, not just the
+    uniform random streams the base property draws."""
+    check_conservation(policy=policy, slots=slots, preempt=True, shed=True,
+                       jobs=_adversarial_jobs(kind, n_jobs, seed), seed=seed)
+
+
+def check_fault_shed_conservation(kind, n_jobs, core, at_frac, seed):
+    """Conservation through fault-induced shedding: a mid-stream dead
+    core stretches the service cost (set_health) and sheds marginal
+    routes — every submitted uid still ends exactly once in completed |
+    dead-letter, and anything shed after detection carries a reason."""
+    jobs = _adversarial_jobs(kind, n_jobs, seed)
+    cfg = QoSConfig(policy="edf", slots=2, chunk=16, min_bucket=16)
+    at = at_frac * 0.2
+    eng = DurableQoSEngine(
+        _PLATFORM, _AGENT.learner.eval_p, cfg,
+        backlog_scale=_AGENT.cfg.backlog_scale, executor="stub",
+        faults=[FaultInjection(at_time=at, core=core)],
+        dead_after_segments=1)
+    for i, (n, arr, budget) in enumerate(jobs):
+        eng.submit(_route(n, seed + i), arrival=arr, deadline=arr + budget)
+    eng.run_until_done()
+    assert not eng.backlog and not eng.pending and not eng.preempted
+    done = [r.uid for r in eng.completed]
+    shed_uids = [d["uid"] for d in eng.dead_letter]
+    assert sorted(done + shed_uids) == list(range(len(jobs)))
+    assert all(d["reason"] == "infeasible" for d in eng.dead_letter)
+    s = eng.stats()
+    assert s["completed"] + s["shed"] == len(jobs)
+    # faults are conserved too: fired at a dispatch, or still pending
+    # when the stream drains first — never silently dropped
+    # (guaranteed-firing coverage lives in tests/test_durability.py)
+    assert s["faults_fired"] + len(eng.pending_faults) == 1
 
 
 def _serve_stream(credit, long_deadline, tight_deadline, n_stream, seed):
@@ -266,6 +329,22 @@ if HAVE_HYPOTHESIS:
         check_crash_replay_conservation(policy, slots, kill_after, jobs,
                                         seed)
 
+    @SETTINGS
+    @given(kind=st.sampled_from(ADVERSARIAL_KINDS),
+           policy=st.sampled_from(["edf", "fifo"]),
+           slots=st.integers(1, 3), n_jobs=st.integers(2, 12),
+           seed=st.integers(0, 999))
+    def test_adversarial_conservation(kind, policy, slots, n_jobs, seed):
+        check_adversarial_conservation(kind, policy, slots, n_jobs, seed)
+
+    @settings(max_examples=min(15, MAX_EXAMPLES), deadline=None)
+    @given(kind=st.sampled_from(ADVERSARIAL_KINDS),
+           n_jobs=st.integers(2, 10),
+           core=st.integers(0, _PLATFORM.n - 1),
+           at_frac=st.floats(0.0, 1.0), seed=st.integers(0, 999))
+    def test_fault_shed_conservation(kind, n_jobs, core, at_frac, seed):
+        check_fault_shed_conservation(kind, n_jobs, core, at_frac, seed)
+
 
 # ---------------------------------------------------------------------------
 # fixed-seed fallback drivers (air-gapped: no hypothesis available)
@@ -325,6 +404,29 @@ def test_crash_replay_conservation_seeded(seed):
 
 @pytest.mark.skipif(HAVE_HYPOTHESIS,
                     reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+def test_adversarial_conservation_seeded(seed):
+    rng = np.random.default_rng(5000 + seed)
+    check_adversarial_conservation(
+        kind=ADVERSARIAL_KINDS[seed % len(ADVERSARIAL_KINDS)],
+        policy=("edf", "fifo")[seed % 2], slots=int(rng.integers(1, 4)),
+        n_jobs=int(rng.integers(2, 13)), seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS[:10])
+def test_fault_shed_conservation_seeded(seed):
+    rng = np.random.default_rng(6000 + seed)
+    check_fault_shed_conservation(
+        kind=ADVERSARIAL_KINDS[seed % len(ADVERSARIAL_KINDS)],
+        n_jobs=int(rng.integers(2, 11)),
+        core=int(rng.integers(0, _PLATFORM.n)),
+        at_frac=float(rng.uniform(0.0, 1.0)), seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
 @pytest.mark.parametrize("seed", _FALLBACK_SEEDS[:6])
 def test_preemption_roundtrip_bit_exact_seeded(seed):
     rng = np.random.default_rng(3000 + seed)
@@ -361,6 +463,31 @@ def test_wave_inherits_aging_credit(fixed_seed):
     wave = eng._next_wave()
     assert [r.uid for r in wave.requests] == [loose.uid]
     assert wave.waves_waited == loose.waves_waited == 2
+
+
+def test_set_health_shrinks_admission(fixed_seed):
+    """Degradation-aware admission: a route that fits on the healthy pool
+    is shed once ``set_health`` reports most of the capacity gone —
+    before a single doomed segment dispatches — and an all-ones row
+    restores the healthy service cost exactly."""
+    eng = _engine(QoSConfig(policy="edf", chunk=16, min_bucket=16))
+    deadline = 2.0 * 16 * eng.svc
+    healthy_need = eng._service_need(16)
+    assert healthy_need < deadline
+    h = np.zeros(eng.spec.n)
+    h[0] = 1.0                    # one survivor carries the whole pool
+    eng.set_health(h)
+    assert eng.svc_scale > 1.0
+    assert eng._service_need(16) > healthy_need
+    doomed = eng.submit(_route(16, fixed_seed), arrival=0.0,
+                        deadline=deadline)
+    eng.run_until_done()
+    assert doomed.status == SHED
+    assert eng.dead_letter[0]["reason"] == "infeasible"
+    assert eng.dispatches == 0    # shed at admission, not after dispatch
+    eng.set_health(np.ones(eng.spec.n))
+    assert eng.svc == eng.base_svc
+    assert eng._service_need(16) == healthy_need
 
 
 def test_shed_goes_to_dead_letter(fixed_seed):
