@@ -27,6 +27,7 @@ MODULES = [
     "training_throughput",
     "pipeline",
     "kernel_micro",
+    "kernels",
     "roofline",
     "recovery",
     "scenarios",

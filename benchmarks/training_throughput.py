@@ -200,6 +200,80 @@ def _loop_vs_fused(tasks: int, episodes: int, quality_episodes: int,
 
 
 # ---------------------------------------------------------------------------
+# fused TD-update kernel arm (report-only on CPU hosts)
+# ---------------------------------------------------------------------------
+
+def _td_kernel_arm(tasks: int, episodes: int, reps: int = 3) -> dict:
+    """Times the fused engine with ``td_kernel=True`` against the default
+    XLA TD update on identical routes/config, and checks loss parity.
+
+    On a CPU host the kernel runs in interpret mode (the Pallas body
+    lowered to plain XLA ops), so the ratio here is NOT a hardware kernel
+    claim in either direction — it is reported, never gated.  The
+    compiled ratio lives in ``BENCH_kernels.json``'s compiled leg, which
+    only runs on a TPU/GPU host under ``REPRO_KERNEL_COMPILED=1``."""
+    import jax
+    import numpy as np
+
+    from benchmarks.common import platform
+    from repro.core.flexai.engine import make_train_fn, train_init
+    from repro.core.platform_jax import spec_from_platform
+    from repro.core.tasks import tasks_to_arrays
+
+    cfg = _cfg()
+    plat = platform()
+    spec = spec_from_platform(plat)
+    state_dim = 3 + 5 * plat.n
+    routes = [tasks_to_arrays(q) for q in _routes(3, tasks)]
+    key = jax.random.PRNGKey(cfg.seed)
+
+    def episode_time(fn):
+        ts0 = train_init(key, state_dim, plat.n, cfg.replay_capacity)
+        jax.block_until_ready(fn(ts0, routes[0])[0].eval_p)   # warm compile
+        best = float("inf")
+        last = None
+        for _ in range(reps):
+            ts = train_init(key, state_dim, plat.n, cfg.replay_capacity)
+            t0 = time.perf_counter()
+            for ep in range(episodes):
+                ts = fn(ts, routes[ep % len(routes)])[0]
+            jax.block_until_ready(ts.eval_p)
+            best = min(best, time.perf_counter() - t0)
+            last = ts
+        return best, last
+
+    t_off, ts_off = episode_time(make_train_fn(spec, cfg))
+    t_on, ts_on = episode_time(make_train_fn(spec, cfg, td_kernel=True))
+    max_p = max(float(jnp_abs_max(a, b))
+                for a, b in zip(ts_off.eval_p, ts_on.eval_p))
+    steps = tasks * episodes
+    return {
+        "env_steps_per_s_off": round(steps / t_off, 1),
+        "env_steps_per_s_on": round(steps / t_on, 1),
+        "on_vs_off_ratio": round(t_off / t_on, 3),
+        "final_param_max_diff": max_p,
+        "parity_ok": bool(max_p <= 1e-5),
+        "mode": "interpret (CPU host)" if _interpret_mode()
+                else "compiled",
+        "note": "interpret-mode Pallas on a CPU host executes the kernel "
+                "body as plain XLA ops — this ratio says nothing about "
+                "hardware kernel speed; see BENCH_kernels.json compiled "
+                "leg for the honest accelerator number (reported, not "
+                "gated)",
+    }
+
+
+def jnp_abs_max(a, b):
+    import jax.numpy as jnp
+    return jnp.max(jnp.abs(a - b))
+
+
+def _interpret_mode() -> bool:
+    from repro.compat import pallas_interpret_default
+    return pallas_interpret_default()
+
+
+# ---------------------------------------------------------------------------
 # data-parallel child (forced host devices)
 # ---------------------------------------------------------------------------
 
@@ -334,6 +408,7 @@ def run(quick: bool = True) -> list:
     dp_tasks = 192 if quick else 384
 
     base = _loop_vs_fused(tasks, episodes, quality_episodes, quality_seeds)
+    tdk = _td_kernel_arm(tasks, episodes)
     dp = {d: _spawn(d, dp_lanes, dp_tasks, iters=3 if quick else 5)
           for d in DP_DEVICE_COUNTS}
     # headline scaling is the 4-device child's paired in-process ratio
@@ -341,6 +416,7 @@ def run(quick: bool = True) -> list:
     dp_speedup = dp[4]["sharded_speedup_vs_unsharded"]
 
     summary = dict(base)
+    summary["td_kernel"] = tdk
     summary["dp"] = {
         "lanes": dp_lanes,
         "tasks_per_lane": dp_tasks,
@@ -376,6 +452,11 @@ def run(quick: bool = True) -> list:
         row("training/dp_speedup_4dev_vs_1dev", 0.0, f"{dp_speedup}x"),
         row("training/dp_parity_ok", 0.0,
             summary["dp"]["parity_ok"]),
+        row("training/td_kernel_env_steps_per_s", 0.0,
+            tdk["env_steps_per_s_on"], mode=tdk["mode"]),
+        row("training/td_kernel_on_vs_off_ratio", 0.0,
+            f"{tdk['on_vs_off_ratio']}x", mode=tdk["mode"]),
+        row("training/td_kernel_parity_ok", 0.0, tdk["parity_ok"]),
     ]
     save("training_throughput", rows)
     return rows

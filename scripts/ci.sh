@@ -40,6 +40,14 @@
 #    health-aware FlexAI arm must have strictly lower deadline-miss than
 #    the fault-blind clean-trained arm on the faulted routes while
 #    staying within 2% STM of it on the clean routes.
+# 11. Kernel suite + kernel honesty gate (BENCH_kernels.json): the full
+#    kernel test suite in interpret mode (always), the same suite
+#    compiled when a TPU/GPU accelerator is present (an explicit SKIPPED
+#    line otherwise — never silently green), then the kernels benchmark:
+#    interpret parity for every kernel family, the 64-update fused
+#    TD-update trajectory pin (<= 1e-5), and the CPU-trainer structural
+#    no-regression (default path pallas-free, td_kernel=False trace
+#    identical to the default).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -162,6 +170,43 @@ sys.exit(0 if ok else 1)
 EOF
 pipeline=$?
 
+echo "== kernel suite (interpret mode, always) =="
+python -m pytest -q tests/test_kernels.py tests/test_dqn_kernel.py
+kern_interp=$?
+
+echo "== kernel suite (compiled, TPU/GPU only) =="
+# same tests, same tolerances, real tiles — REPRO_KERNEL_COMPILED=1
+# switches pallas_interpret_default() off on accelerator hosts.  The
+# skip is EXPLICIT: a CPU-only CI run prints the reason and stays green
+# on this leg rather than pretending the compiled path was exercised.
+ACCEL="$(python -c 'from repro.kernels.protocol import accelerator_platform;
+print(accelerator_platform() or "")')"
+if [ -n "${ACCEL}" ]; then
+    REPRO_KERNEL_COMPILED=1 python -m pytest -q \
+        tests/test_kernels.py tests/test_dqn_kernel.py
+    kern_compiled=$?
+else
+    echo "SKIPPED: compiled kernel leg needs a TPU/GPU accelerator;" \
+         "this host is CPU-only (interpret-mode parity ran above)"
+    kern_compiled=0
+fi
+
+echo "== kernel honesty gate (parity / trajectory / no-regression) =="
+python -m benchmarks.run --only kernels \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_kernels.json"))
+g = r["gate"]
+ok = g["ok"]
+t = r["td_trajectory"]
+print(f"parity_ok={g['parity_ok']} "
+      f"trajectory_max_param_diff={t['max_param_diff']:.2e} "
+      f"trainer_no_regression={g['trainer_no_regression_ok']} "
+      f"compiled_leg={g['compiled_leg'].split(':')[0]}")
+sys.exit(0 if ok else 1)
+EOF
+kern_bench=$?
+
 echo "== benchmark smoke (quick mode: metaheuristic throughput) =="
 python -m benchmarks.run --only metaheuristic_throughput \
     && python - <<'EOF'
@@ -194,10 +239,12 @@ sys.exit(0 if ok else 1)
 EOF
 train_bench=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} scenarios_exit=${scenarios} =="
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} scenarios_exit=${scenarios} kern_interp_exit=${kern_interp} kern_compiled_exit=${kern_compiled} kern_bench_exit=${kern_bench} =="
 [ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
     && [ "${dp}" -eq 0 ] && [ "${pipeline}" -eq 0 ] \
     && [ "${bench}" -eq 0 ] \
     && [ "${train_bench}" -eq 0 ] && [ "${serve_prop}" -eq 0 ] \
     && [ "${serve_bench}" -eq 0 ] && [ "${durability}" -eq 0 ] \
-    && [ "${recovery}" -eq 0 ] && [ "${scenarios}" -eq 0 ]
+    && [ "${recovery}" -eq 0 ] && [ "${scenarios}" -eq 0 ] \
+    && [ "${kern_interp}" -eq 0 ] && [ "${kern_compiled}" -eq 0 ] \
+    && [ "${kern_bench}" -eq 0 ]

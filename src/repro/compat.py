@@ -23,8 +23,10 @@ export                 resolves to
                        ``AxisType`` exists, else ``None``
 ``CompilerParams``     ``pltpu.CompilerParams`` (>= 0.6) else
                        ``pltpu.TPUCompilerParams``
-``pallas_interpret_default``  True off-TPU (Pallas kernels fall back to
-                       interpret mode so CPU CI executes the kernel bodies)
+``pallas_interpret_default``  True off-accelerator (Pallas kernels fall
+                       back to interpret mode so CPU CI executes the
+                       kernel bodies); ``REPRO_KERNEL_COMPILED=1`` also
+                       compiles on GPU, ``=0`` forces interpret (debug)
 =====================  ====================================================
 """
 from __future__ import annotations
@@ -105,7 +107,33 @@ def __getattr__(name):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
+def _interpret_for(platform: str, compiled_env: str | None) -> bool:
+    """Pure decision core of :func:`pallas_interpret_default` (split out so
+    the protocol tests can exercise every platform/env combination on a
+    CPU-only host).
+
+    * ``REPRO_KERNEL_COMPILED=0`` forces interpret everywhere (debug).
+    * TPU compiles by default (Mosaic is the native path).
+    * ``REPRO_KERNEL_COMPILED=1`` additionally compiles on GPU (Triton
+      lowering) — the hardware-run protocol of ``repro.kernels.protocol``.
+    * CPU has no Pallas compiler: always interpret, even when compiled
+      mode is requested — the benchmark/CI layer reports that skip
+      explicitly rather than silently greening.
+    """
+    if compiled_env == "0":
+        return True
+    if platform == "tpu":
+        return False
+    if compiled_env == "1" and platform == "gpu":
+        return False
+    return True
+
+
 def pallas_interpret_default() -> bool:
-    """Pallas kernels compile (Mosaic) only on TPU; everywhere else default
-    to interpret mode so the same call sites run under CPU CI."""
-    return jax.devices()[0].platform != "tpu"
+    """Pallas kernels compile (Mosaic/Triton) only on TPU — or on GPU when
+    ``REPRO_KERNEL_COMPILED=1`` requests the compiled hardware run;
+    everywhere else default to interpret mode so the same call sites run
+    under CPU CI."""
+    import os
+    return _interpret_for(jax.devices()[0].platform,
+                          os.environ.get("REPRO_KERNEL_COMPILED"))

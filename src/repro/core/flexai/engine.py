@@ -182,9 +182,16 @@ def train_init(key, state_dim: int, n_actions: int,
     )
 
 
-def _train_run(spec: PlatformSpec, cfg):
+def _train_run(spec: PlatformSpec, cfg, td_kernel: bool = False):
     """Un-jitted single-lane fused training episode (see
     :func:`make_train_fn` for the contract).
+
+    ``td_kernel=True`` swaps the scan body's ``dqn_td_update`` for the
+    Pallas fused kernel (``repro.kernels.dqn_update``): forward, double-
+    DQN target, Huber loss, hand-derived backward, global-norm clip and
+    Adam in one VMEM-resident pass.  The switch is a Python-level branch,
+    so the default trace is *identical* to the pre-kernel engine — the
+    kernel compiles out entirely when off.
 
     The optional ``health`` trace makes this the *degradation trainer*:
     the greedy arm is masked to alive cores and ``platform_step`` charges
@@ -195,6 +202,11 @@ def _train_run(spec: PlatformSpec, cfg):
     (the DP-parity contract; the DP trainer itself stays clean-only)."""
     feat = jnp.asarray(kind_feature_table())
     n_actions = spec.n
+    if td_kernel:
+        from repro.kernels.dqn_update import dqn_td_update_fused
+        td_update = dqn_td_update_fused
+    else:
+        td_update = dqn_td_update
 
     def body(carry, x):
         # sv rides the carry: nsv computed at step i-1 IS step i's
@@ -232,7 +244,7 @@ def _train_run(spec: PlatformSpec, cfg):
 
         def upd(_):
             batch = device_replay_sample(replay, k_smp, cfg.batch_size)
-            new_p, new_opt, loss = dqn_td_update(
+            new_p, new_opt, loss = td_update(
                 ts.eval_p, ts.targ_p, ts.opt, batch,
                 gamma=cfg.gamma, lr=cfg.lr)
             updates = ts.updates + 1
@@ -277,7 +289,8 @@ def _train_run(spec: PlatformSpec, cfg):
     return run
 
 
-def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
+def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False,
+                  td_kernel: bool = False):
     """Compile the fused training episode for a ``FlexAIConfig``-shaped
     ``cfg`` (gamma, lr, batch_size, min_replay, target_sync_every,
     eps_start/end/decay_steps, update_every, backlog_scale).
@@ -285,10 +298,12 @@ def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
     Returns ``fn(train_state, tasks) -> (train_state, platform_state,
     records, losses, update_mask)``.  ``batched=True`` vmaps over lanes:
     stacked TrainState (independent seeds) x stacked routes.
+    ``td_kernel=True`` runs the TD update through the Pallas fused kernel
+    (interpret-mode off-accelerator; see ``repro.kernels.protocol``).
     """
     # note: no buffer donation — at init eval_p and targ_p alias the same
     # arrays, and donating an aliased pytree is an XLA error
-    run = _train_run(spec, cfg)
+    run = _train_run(spec, cfg, td_kernel=td_kernel)
     if batched:
         single = run
 
@@ -301,7 +316,7 @@ def make_train_fn(spec: PlatformSpec, cfg, batched: bool = False):
 
 
 def make_sharded_train_fn(spec: PlatformSpec, cfg, mesh,
-                          axis: str = "routes"):
+                          axis: str = "routes", td_kernel: bool = False):
     """Compile the multi-device fused training episode: stacked lanes
     (TrainState x routes) shard over ``mesh``'s ``axis``, each device
     training its local lanes' independent agents in one scan.
@@ -314,7 +329,8 @@ def make_sharded_train_fn(spec: PlatformSpec, cfg, mesh,
 
     from repro.compat import shard_map
 
-    run = jax.vmap(_train_run(spec, cfg), in_axes=(0, 0))
+    run = jax.vmap(_train_run(spec, cfg, td_kernel=td_kernel),
+                   in_axes=(0, 0))
     sharded = shard_map(run, mesh=mesh, in_specs=(P(axis), P(axis)),
                         out_specs=P(axis))
     return jax.jit(sharded)
@@ -343,8 +359,15 @@ def dp_train_init(key, state_dim: int, n_actions: int, replay_capacity: int,
 
 
 def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
-                  n_shards: int = 1, chunk_collectives: bool = True):
+                  n_shards: int = 1, chunk_collectives: bool = True,
+                  td_kernel: bool = False):
     """Un-jitted data-parallel fused episode over ``lanes`` local routes.
+
+    ``td_kernel=True`` computes each lane's clipped TD gradient with the
+    Pallas fused kernel's *grads* variant — the ``(loss, grads)`` /
+    ``adam_apply`` seam below is untouched, so the per-lane gradients
+    still average locally and ``lax.pmean`` across the mesh axis before
+    the single shared Adam step.
 
     Unlike :func:`_train_run` (N *independent* population agents), every
     lane — and, when ``axis`` names a mesh axis under ``shard_map``, every
@@ -380,6 +403,11 @@ def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
     """
     feat = jnp.asarray(kind_feature_table())
     n_actions = spec.n
+    if td_kernel:
+        from repro.kernels.dqn_update import dqn_td_grads_fused
+        td_grads = dqn_td_grads_fused
+    else:
+        td_grads = dqn_td_grads
 
     if axis is None:
         psum = pmean = lambda x: x
@@ -424,8 +452,8 @@ def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
                 lambda b, k: device_replay_sample(b, k, cfg.batch_size)
             )(replay, lane_keys(k_smp))
             return jax.vmap(
-                lambda b: dqn_td_grads(ts.eval_p, ts.targ_p, b,
-                                       gamma=cfg.gamma))(batches)
+                lambda b: td_grads(ts.eval_p, ts.targ_p, b,
+                                   gamma=cfg.gamma))(batches)
 
         # cadence = update_every-boundary CROSSING, not an exact-multiple
         # check: env_steps advances by the global valid-lane count per
@@ -526,7 +554,8 @@ def _dp_train_run(spec: PlatformSpec, cfg, lanes: int, axis=None,
 
 
 def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
-                     axis: str = "routes", chunk_collectives: bool = True):
+                     axis: str = "routes", chunk_collectives: bool = True,
+                     td_kernel: bool = False):
     """Compile the data-parallel fused trainer.
 
     Returns ``fn(train_state, tasks) -> (train_state, platform_states,
@@ -546,7 +575,8 @@ def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
     """
     if mesh is None:
         return jax.jit(_dp_train_run(spec, cfg, lanes,
-                                     chunk_collectives=chunk_collectives))
+                                     chunk_collectives=chunk_collectives,
+                                     td_kernel=td_kernel))
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
@@ -556,7 +586,8 @@ def make_dp_train_fn(spec: PlatformSpec, cfg, lanes: int, mesh=None,
                          f"the mesh size {mesh.size}")
     run = _dp_train_run(spec, cfg, lanes // mesh.size, axis=axis,
                         n_shards=mesh.size,
-                        chunk_collectives=chunk_collectives)
+                        chunk_collectives=chunk_collectives,
+                        td_kernel=td_kernel)
     ts_specs = TrainState(eval_p=P(), targ_p=P(), opt=P(), replay=P(axis),
                           env_steps=P(), updates=P(), key=P())
     sharded = shard_map(run, mesh=mesh, in_specs=(ts_specs, P(axis)),
@@ -581,10 +612,20 @@ class ScanFlexAI:
     * ``dp=True``: ONE synchronized agent trained data-parallel over a
       ``lanes``-route global batch (per-lane TD gradients averaged, and —
       with ``mesh`` — ``lax.pmean``-ed across devices each step).
+
+    ``td_kernel=True`` routes every TD update through the Pallas fused
+    kernel (``repro.kernels.dqn_update``): single-lane/population paths
+    use the Adam-folded variant, the DP path the grads variant ahead of
+    its ``pmean`` + shared ``adam_apply``.  Default off — the flag is a
+    trace-time Python branch, so the kernel compiles out entirely and
+    the default trainer stays bit-identical to the pre-kernel engine.
+    Off-accelerator the kernel runs in Pallas interpret mode (slower on
+    CPU — honest numbers in BENCH_kernels.json); set
+    ``REPRO_KERNEL_COMPILED=1`` on a TPU/GPU host to run it compiled.
     """
 
     def __init__(self, platform, cfg, lanes: int = 1, mesh=None,
-                 dp: bool = False):
+                 dp: bool = False, td_kernel: bool = False):
         self.cfg = cfg
         self.spec = spec_from_platform(platform)
         self.n_actions = platform.n
@@ -592,13 +633,15 @@ class ScanFlexAI:
         self.lanes = lanes
         self.mesh = mesh
         self.dp = dp
+        self.td_kernel = td_kernel
         key = jax.random.PRNGKey(cfg.seed)
         if dp:
             self.ts = dp_train_init(key, self.state_dim, self.n_actions,
                                     cfg.replay_capacity, lanes)
             self._train_fn = make_dp_train_fn(
                 self.spec, cfg, lanes, mesh=mesh,
-                axis=mesh.axis_names[0] if mesh is not None else "routes")
+                axis=mesh.axis_names[0] if mesh is not None else "routes",
+                td_kernel=td_kernel)
         elif lanes == 1:
             self.ts = train_init(key, self.state_dim, self.n_actions,
                                  cfg.replay_capacity)
@@ -617,10 +660,12 @@ class ScanFlexAI:
                         f"lanes={lanes} must be >= 2 and a multiple of the "
                         f"mesh size {mesh.size} (omit mesh for single-lane)")
                 self._train_fn = make_sharded_train_fn(
-                    self.spec, cfg, mesh, axis=mesh.axis_names[0])
+                    self.spec, cfg, mesh, axis=mesh.axis_names[0],
+                    td_kernel=td_kernel)
             else:
                 self._train_fn = make_train_fn(self.spec, cfg,
-                                               batched=lanes > 1)
+                                               batched=lanes > 1,
+                                               td_kernel=td_kernel)
         self._sched_fn = make_schedule_fn(self.spec, cfg.backlog_scale)
         self._eval_fn = None
         self.losses: list[float] = []
@@ -793,12 +838,13 @@ class ScanFlexAI:
 
     @classmethod
     def from_agent(cls, agent, platform, *, lanes: int = 1, mesh=None,
-                   dp: bool = False, cfg=None) -> "ScanFlexAI":
+                   dp: bool = False, td_kernel: bool = False,
+                   cfg=None) -> "ScanFlexAI":
         """Lossless import of a ``FlexAIAgent``: same config (unless
         overridden), same EvalNet/TargNet weights, ready to continue
         training on the fused path."""
         trainer = cls(platform, cfg if cfg is not None else agent.cfg,
-                      lanes=lanes, mesh=mesh, dp=dp)
+                      lanes=lanes, mesh=mesh, dp=dp, td_kernel=td_kernel)
         trainer.set_params(agent.learner.eval_p)
         trainer.losses = list(agent.losses)
         return trainer

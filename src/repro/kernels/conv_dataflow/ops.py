@@ -21,6 +21,10 @@ DATAFLOWS = ("SconvOD", "SconvIC", "MconvMC")
 
 
 def _tile(n: int, target: int) -> int:
+    # largest divisor <= target: still required by mconv_mc, whose grid
+    # must divide the channel dims exactly.  sconv_ic / sconv_od pad to
+    # the requested tile internally (masked/zero tail blocks), so they
+    # take `target` directly and prime dims no longer degrade the grid.
     t = min(target, n)
     while n % t:
         t -= 1
@@ -44,10 +48,9 @@ def conv2d(x: jax.Array, w: jax.Array, *, dataflow: str = "MconvMC",
         x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
 
     if dataflow == "SconvOD":
-        out = sconv_od(x, w, cin_tile=_tile(cin, 8), interpret=interpret)
+        out = sconv_od(x, w, cin_tile=8, interpret=interpret)
     elif dataflow == "SconvIC":
-        ho = x.shape[1] - kh + 1
-        out = sconv_ic(x, w, row_tile=_tile(ho, 8), interpret=interpret)
+        out = sconv_ic(x, w, row_tile=8, interpret=interpret)
     elif dataflow == "MconvMC":
         out = mconv_mc(x, w, cout_tile=_tile(cout, 128),
                        cin_tile=_tile(cin, 32), interpret=interpret)

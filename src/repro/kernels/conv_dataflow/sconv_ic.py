@@ -4,17 +4,29 @@ Taxonomy mapping (DESIGN.md §3):
   * SSconv: each BasicUnit iteration covers PART of a 2D convolution —
     the grid tiles the OUTPUT rows, so one invocation computes one
     output-row band (a sub-rectangle of the conv).
-  * IP (ifmaps propagate): the ifmap is VMEM-resident and read at kh*kw
-    shifted offsets — the shift-register ifmap propagation between PEs
-    becomes shifted slices of the resident block.
+  * IP (ifmaps propagate): the ifmap row *window* for the band is
+    VMEM-resident and read at kh*kw shifted offsets — the shift-register
+    ifmap propagation between PEs becomes shifted slices of the window.
   * CR (concentrated registers, never psums): the OUTPUT band is the
     stationary operand (each "PE" owns one output neuron, ShiDianNao
     style); psums never leave the accumulator until the band is done.
 
+VMEM residency is **bounded**: each grid step DMAs its own
+``row_tile + kh - 1`` row window (the band's rows plus the ``kh - 1``
+halo rows shared with the next band) from the un-blocked ifmap
+(``memory_space=ANY``) into a fixed scratch buffer.  Whole-ifmap-height
+residency — the old spec, which capped the kernel at feature maps that
+fit VMEM — is gone; arbitrarily tall ifmaps stream through the same
+window.
+
+The output-row grid no longer requires ``row_tile | ho``: the host pads
+H so the band grid covers ``ceil(ho / row_tile)`` full tiles, the tail
+band computes on zero rows (every DMA stays in-bounds by construction)
+and the caller slices the pad rows off.  Prime output heights keep the
+requested tile instead of degrading to ``row_tile=1``.
+
 Grid: (N, Ho_tiles) — fully parallel; no cross-step accumulation
 (contrast with SconvOD, where psums flow across sequential grid steps).
-The ifmap stays whole-height in VMEM (halo rows come for free); a
-production variant would use BoundedSlice halo windows instead.
 """
 from __future__ import annotations
 
@@ -28,10 +40,18 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import CompilerParams
 
 
-def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, cin: int,
-            row_tile: int):
+def _kernel(x_hbm, w_ref, o_ref, xwin_ref, sem, *, kh: int, kw: int,
+            cin: int, row_tile: int):
+    b = pl.program_id(0)
     r = pl.program_id(1)
-    row0 = r * row_tile
+    # halo window DMA: this band's row_tile rows + kh-1 shared halo rows
+    pltpu.make_async_copy(
+        x_hbm.at[b, pl.ds(r * row_tile, row_tile + kh - 1)],
+        xwin_ref, sem).start()
+    pltpu.make_async_copy(
+        x_hbm.at[b, pl.ds(r * row_tile, row_tile + kh - 1)],
+        xwin_ref, sem).wait()
+
     wo = o_ref.shape[1]
     acc = jnp.zeros(o_ref.shape, jnp.float32)
     # output-stationary: every (di, dj, ci) step broadcasts one filter tap
@@ -39,9 +59,9 @@ def _kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, cin: int,
     for di in range(kh):
         for dj in range(kw):
             for ci in range(cin):
-                plane = x_ref[pl.ds(row0 + di, row_tile),
-                              pl.ds(dj, wo), ci]                # [rt, Wo]
-                taps = w_ref[di, dj, ci, :]                     # [Cout]
+                plane = xwin_ref[pl.ds(di, row_tile),
+                                 pl.ds(dj, wo), ci]              # [rt, Wo]
+                taps = w_ref[di, dj, ci, :]                      # [Cout]
                 acc += plane[:, :, None].astype(jnp.float32) * \
                     taps[None, None, :].astype(jnp.float32)
     o_ref[...] = acc.astype(o_ref.dtype)
@@ -53,25 +73,32 @@ def sconv_ic(x: jax.Array, w: jax.Array, *, row_tile: int = 8,
     n, h, wd, cin = x.shape
     kh, kw, _, cout = w.shape
     ho, wo = h - kh + 1, wd - kw + 1
-    # the grid tiles output rows evenly; for odd heights fall back to the
-    # largest divisor of ho that fits the requested tile
     row_tile = min(row_tile, ho)
-    while ho % row_tile:
-        row_tile -= 1
-    grid = (n, ho // row_tile)
+    nb = pl.cdiv(ho, row_tile)
+    ho_pad = nb * row_tile
+    if ho_pad != ho:
+        # tail band: pad H so every window DMA is in-bounds; the padded
+        # output rows are computed on zero rows and sliced off below
+        x = jnp.pad(x, ((0, 0), (0, ho_pad - ho), (0, 0), (0, 0)))
+    grid = (n, nb)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, kh=kh, kw=kw, cin=cin, row_tile=row_tile),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((None, h, wd, cin), lambda b, r: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
             pl.BlockSpec((kh, kw, cin, cout), lambda b, r: (0, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((None, row_tile, wo, cout),
                                lambda b, r: (b, r, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, ho_pad, wo, cout), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((row_tile + kh - 1, wd, cin), x.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
         name="sconv_ic",
     )(x, w)
+    return out[:, :ho] if ho_pad != ho else out

@@ -59,12 +59,17 @@ def sconv_od(x: jax.Array, w: jax.Array, *, cin_tile: int = 8,
     n, h, wd, cin = x.shape
     kh, kw, _, cout = w.shape
     ho, wo = h - kh + 1, wd - kw + 1
-    # the channel grid must divide cin evenly; fall back to the largest
-    # divisor of cin that fits the requested tile
+    # the channel grid covers ceil(cin / cin_tile) full tiles: prime
+    # channel counts zero-pad to the next tile boundary (zero ifmap
+    # channels contribute exactly nothing to the accumulator) instead of
+    # degrading to cin_tile=1
     cin_tile = min(cin_tile, cin)
-    while cin % cin_tile:
-        cin_tile -= 1
-    grid = (n, cin // cin_tile)
+    n_ci = pl.cdiv(cin, cin_tile)
+    cin_pad = n_ci * cin_tile
+    if cin_pad != cin:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cin_pad - cin)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, cin_pad - cin), (0, 0)))
+    grid = (n, n_ci)
 
     return pl.pallas_call(
         functools.partial(_kernel, kh=kh, kw=kw, cin_tile=cin_tile),

@@ -1,0 +1,5 @@
+"""Pallas fused DQN TD-update (see kernel.py for the dataflow design)."""
+from .kernel import dqn_td_pallas  # noqa: F401
+from .ops import (BATCH_TILE, dqn_td_grads_fused,  # noqa: F401
+                  dqn_td_update_fused)
+from .ref import dqn_td_grads_ref, dqn_td_update_ref  # noqa: F401

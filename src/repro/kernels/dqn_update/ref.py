@@ -1,0 +1,15 @@
+"""Reference implementation for the fused TD-update kernel.
+
+Unlike the conv kernels (whose pure-jnp references live beside them),
+the TD-update oracle IS the production trainer math:
+:func:`repro.core.flexai.dqn.dqn_td_grads` (``jax.value_and_grad`` over
+the Huber double-DQN loss + global-norm clip) and ``dqn_td_update``
+(grads + ``adam_apply``).  Re-exported here so kernel tests and the
+benchmark pin parity against one canonical name, and so this package
+follows the kernel-layer convention (kernel.py / ops.py / ref.py).
+"""
+from repro.core.flexai.dqn import (adam_apply, dqn_td_grads,  # noqa: F401
+                                   dqn_td_update, qnet_apply)
+
+dqn_td_grads_ref = dqn_td_grads
+dqn_td_update_ref = dqn_td_update

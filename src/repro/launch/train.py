@@ -17,6 +17,14 @@ benchmark checkpoints) — data-parallel over all visible devices with
     PYTHONPATH=src python -m repro.launch.train --flexai --area UB \
         --episodes 100 --dp --dp-lanes 4 --shard \
         --weights experiments/flexai/agent_ub.npz
+
+``--td-kernel`` swaps the TD update inside the training scan for the
+fused Pallas kernel (``repro.kernels.dqn_update``): EvalNet forward,
+double-DQN target, Huber loss, hand-derived backward, global-norm clip
+and Adam in one VMEM-resident pass.  On CPU hosts it runs in interpret
+mode (numerics-faithful, not a speed claim); on TPU/GPU hosts set
+``REPRO_KERNEL_COMPILED=1`` to run the compiled Mosaic/Triton kernel
+(see ``repro.kernels.protocol`` and ``benchmarks/kernels.py``).
 """
 from __future__ import annotations
 
@@ -74,7 +82,13 @@ def run_flexai_training(args) -> int:
         mesh = make_mesh((n_dev,), ("routes",))
         print(f"training mesh: {n_dev} device(s) on axis 'routes'")
     lanes = args.dp_lanes if args.dp else 1
-    trainer = ScanFlexAI(plat, cfg, lanes=lanes, mesh=mesh, dp=args.dp)
+    trainer = ScanFlexAI(plat, cfg, lanes=lanes, mesh=mesh, dp=args.dp,
+                         td_kernel=args.td_kernel)
+    if args.td_kernel:
+        from repro.compat import pallas_interpret_default
+        mode = ("interpret (CPU host — plain XLA ops, not a speed claim)"
+                if pallas_interpret_default() else "compiled")
+        print(f"TD update: fused Pallas kernel, {mode}")
     if args.weights and os.path.exists(args.weights):
         trainer.load_weights(args.weights)
         print(f"resumed weights from {args.weights}")
@@ -164,6 +178,11 @@ def main(argv=None) -> int:
                     help="[flexai] data-parallel trainer (one synchronized "
                          "agent over a route batch)")
     ap.add_argument("--dp-lanes", type=int, default=4)
+    ap.add_argument("--td-kernel", action="store_true",
+                    help="use the fused Pallas TD-update kernel "
+                         "(kernels/dqn_update) inside the training scan; "
+                         "interpret mode on CPU hosts, compiled on "
+                         "TPU/GPU under REPRO_KERNEL_COMPILED=1")
     ap.add_argument("--shard", action="store_true",
                     help="[flexai] shard lanes over all visible devices")
     ap.add_argument("--weights", default=None,

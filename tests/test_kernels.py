@@ -1,5 +1,10 @@
-"""Per-kernel correctness: shape/dtype sweeps vs pure-jnp oracles
-(interpret mode executes the Pallas kernel body on CPU)."""
+"""Per-kernel correctness: shape/dtype sweeps vs pure-jnp oracles.
+
+Execution mode follows the hardware-run protocol
+(``repro.kernels.protocol``): interpret mode on CPU hosts (the kernel
+body executes as XLA ops), compiled Mosaic/Triton when
+``REPRO_KERNEL_COMPILED=1`` runs this suite on a TPU/GPU host — same
+tests, same tolerances, real tiles."""
 import math
 
 import jax
@@ -9,9 +14,11 @@ import pytest
 
 from repro.kernels.conv_dataflow import conv2d, conv2d_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.protocol import compiled_available
 from repro.kernels.ssd_scan import ssd_ref, ssd_scan
 
 KEY = jax.random.PRNGKey(3)
+INTERPRET = not compiled_available()
 
 _TOL = {jnp.float32: dict(rtol=1e-4, atol=1e-4),
         jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
@@ -35,7 +42,7 @@ def test_conv_dataflow_vs_oracle(dataflow, shape, dtype):
     w = jax.random.normal(k2, (k, k, ci, co), jnp.float32) * 0.2
     ref = conv2d_ref(x, w)
     out = conv2d(x.astype(dtype), w.astype(dtype), dataflow=dataflow,
-                 interpret=True)
+                 interpret=INTERPRET)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_TOL[dtype])
 
@@ -44,28 +51,62 @@ def test_conv_same_padding_and_stride():
     x = jax.random.normal(KEY, (1, 9, 9, 4))
     w = jax.random.normal(KEY, (3, 3, 4, 8)) * 0.2
     out = conv2d(x, w, dataflow="MconvMC", padding="SAME", stride=2,
-                 interpret=True)
+                 interpret=INTERPRET)
     assert out.shape == (1, 5, 5, 8)
 
 
 def test_sconv_direct_calls_with_indivisible_tiles():
-    """Direct kernel calls with a tile that doesn't divide the dim must
-    fall back to the largest divisor instead of asserting (odd
-    feature-map heights / channel counts)."""
+    """Tiles that don't divide the dim keep the REQUESTED tile: sconv_ic
+    pads the output-row grid (masked tail band), sconv_od zero-pads the
+    channel axis — neither degrades to a smaller divisor tile."""
     from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
     from repro.kernels.conv_dataflow.sconv_od import sconv_od
     k1, k2 = jax.random.split(KEY)
     # ho = 9 with row_tile=8 and cin = 6 with cin_tile=4: the requested
-    # tile does NOT divide the dim even after the min() clamp, so the
-    # divisor-fallback loop must actually run (9 -> 3, 6 -> 3)
+    # tile does NOT divide the dim even after the min() clamp
     x = jax.random.normal(k1, (1, 11, 8, 6), jnp.float32)
     w = jax.random.normal(k2, (3, 3, 6, 8), jnp.float32) * 0.2
     ref = conv2d_ref(x, w)
-    out_ic = sconv_ic(x, w, row_tile=8, interpret=True)
+    out_ic = sconv_ic(x, w, row_tile=8, interpret=INTERPRET)
     np.testing.assert_allclose(np.asarray(out_ic), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
-    out_od = sconv_od(x, w, cin_tile=4, interpret=True)
+    out_od = sconv_od(x, w, cin_tile=4, interpret=INTERPRET)
     np.testing.assert_allclose(np.asarray(out_od), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("ho", [13, 7, 23])
+def test_sconv_prime_output_heights_keep_requested_tile(ho):
+    """Prime output heights used to degrade the sconv_ic grid to
+    row_tile=1 (one grid step per output row) and sconv_od to whatever
+    divisor survived; both now pad to the requested tile and stay
+    parity-exact."""
+    from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
+    from repro.kernels.conv_dataflow.sconv_od import sconv_od
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, ho))
+    x = jax.random.normal(k1, (2, ho + 2, 9, 11), jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 11, 4), jnp.float32) * 0.2
+    ref = conv2d_ref(x, w)
+    out_ic = sconv_ic(x, w, row_tile=8, interpret=INTERPRET)
+    np.testing.assert_allclose(np.asarray(out_ic), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # cin = 11 (prime) with cin_tile=8: zero-pads to 16, two grid steps
+    out_od = sconv_od(x, w, cin_tile=8, interpret=INTERPRET)
+    np.testing.assert_allclose(np.asarray(out_od), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sconv_ic_tall_ifmap_halo_window():
+    """H = 515: the old whole-ifmap-height BlockSpec would demand the
+    full ifmap resident per grid step; the halo-window kernel streams
+    bounded row_tile + kh - 1 windows and must stay parity-exact,
+    including the padded tail band (ho = 513 = 64 * 8 + 1)."""
+    from repro.kernels.conv_dataflow.sconv_ic import sconv_ic
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (1, 515, 8, 2), jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 2, 4), jnp.float32) * 0.2
+    out = sconv_ic(x, w, row_tile=8, interpret=INTERPRET)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(conv2d_ref(x, w)),
                                rtol=1e-4, atol=1e-4)
 
 
@@ -87,7 +128,7 @@ def test_flash_attention_vs_oracle(shape, dtype):
     v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
     out = flash_attention(q.astype(dtype), k.astype(dtype), v.astype(dtype),
                           causal=causal, block_q=32, block_k=32,
-                          interpret=True)
+                          interpret=INTERPRET)
     kr = jnp.repeat(k, h // kh, axis=2)
     vr = jnp.repeat(v, h // kh, axis=2)
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
@@ -116,7 +157,7 @@ def test_ssd_scan_vs_oracle(shape, dtype):
     Bm = jax.random.normal(ks[2], (b, s, n), jnp.float32) * 0.5
     Cm = jax.random.normal(ks[3], (b, s, n), jnp.float32) * 0.5
     y, sfin = ssd_scan(u.astype(dtype), a, Bm.astype(dtype),
-                       Cm.astype(dtype), chunk=chunk, interpret=True)
+                       Cm.astype(dtype), chunk=chunk, interpret=INTERPRET)
     uf = u.transpose(0, 2, 1, 3).reshape(b * h, s, p)
     af = a.transpose(0, 2, 1).reshape(b * h, s)
     Bf = jnp.repeat(Bm[:, None], h, 1).reshape(b * h, s, n)
