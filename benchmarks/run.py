@@ -22,6 +22,7 @@ MODULES = [
     "fig14_braking_distance",
     "scheduler_throughput",
     "serve_qos",
+    "serve_load",
     "metaheuristic_throughput",
     "sharded_engine",
     "training_throughput",

@@ -1,0 +1,179 @@
+"""Open-loop serving-load benchmark: continuous batching vs drain waves.
+
+Drives ``repro.serve.qos.QoSPlacementEngine`` with seeded open-loop
+arrival streams from ``repro.serve.loadgen`` (Poisson over the scenario
+families) at offered loads 0.5 / 1.0 / 2.0, and reports what production
+provisioning actually looks at: p50/p99/p99.9 response latency
+(finish - arrival), goodput (deadline-met completions per virtual
+second), and shed rate — per load, for drain-wave EDF vs
+continuous-batching EDF at identical devices and config.
+
+Also runs the sharded-wave parity trace: the same workload served with
+the wave's lane axis shard_mapped over a ``("routes",)`` mesh must
+reproduce the single-device serving digest bit-exactly (placements,
+finish times, wave log, clock) in both drain and continuous modes.
+
+Everything rides the deterministic virtual clock (measured service
+times are reported as a calibration info arm, never gated), so CI can
+gate hard: continuous goodput strictly above drain at load 2.0, no p99
+regression at load 0.5, parity flag true.
+
+Emits the standard benchmark rows *and* ``BENCH_load.json`` (repo root).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RATE_SCALE, host_tuning, row, save
+
+LOADS = (0.5, 1.0, 2.0)
+
+
+def _base_route():
+    from repro.core.environment import EnvironmentParams, build_task_queue
+    from repro.core.tasks import tasks_to_arrays
+    return tasks_to_arrays(build_task_queue(EnvironmentParams(
+        route_km=0.008, rate_scale=RATE_SCALE, seed=321,
+        max_times_turn=1, max_times_reverse=1,
+        max_duration_turn=2.0, max_duration_reverse=3.0)))
+
+
+def _engine(plat, agent, *, continuous: bool, slots: int, mesh=None,
+            measured: bool = False):
+    from repro.serve.qos import QoSConfig, QoSPlacementEngine
+    cfg = QoSConfig(policy="edf", slots=slots, chunk=8, min_bucket=16,
+                    continuous=continuous, measured_svc=measured)
+    return QoSPlacementEngine(plat, agent.learner.eval_p, cfg,
+                              backlog_scale=agent.cfg.backlog_scale,
+                              mesh=mesh)
+
+
+def _metrics(eng) -> dict:
+    s = eng.stats()
+    lat = np.asarray([r.finish - r.arrival for r in eng.completed],
+                     np.float64)
+    met = sum(1 for r in eng.completed if r.slack >= 0.0)
+    span = max(s["virtual_time_s"], 1e-12)
+    pct = (lambda q: float(np.percentile(lat, q)) if lat.size else 0.0)
+    return {
+        "p50_latency_s": pct(50), "p99_latency_s": pct(99),
+        "p999_latency_s": pct(99.9),
+        "goodput_rps": met / span,
+        "shed_rate": (s["shed"] / s["resolved"]) if s["resolved"] else 0.0,
+        "completed": s["completed"], "shed": s["shed"],
+        "refills": s["refills"], "waves": s["waves"],
+        "miss_rate": s["miss_rate"], "virtual_time_s": s["virtual_time_s"],
+    }
+
+
+def _serve(trace, plat, agent, *, continuous: bool, slots: int, mesh=None):
+    from repro.serve.loadgen import submit_trace
+    eng = _engine(plat, agent, continuous=continuous, slots=slots,
+                  mesh=mesh)
+    submit_trace(eng, trace)
+    eng.run_until_done()
+    return eng
+
+
+def run(quick: bool = True) -> list:
+    import jax
+
+    from repro.core.flexai import FlexAIAgent, FlexAIConfig
+    from repro.core.hmai import HMAIPlatform
+    from repro.serve.durability import digests_equal, serving_digest
+    from repro.serve.loadgen import LoadGenConfig, generate
+
+    n_req = 18 if quick else 48
+    slots = 4
+    plat = HMAIPlatform(capacity_scale=RATE_SCALE)
+    agent = FlexAIAgent(plat, FlexAIConfig(seed=0))
+    base = _base_route()
+    probe = _engine(plat, agent, continuous=False, slots=slots)
+    mean_service = probe._bucket(base.num_tasks) * probe.svc
+
+    rows, result = [], {"loads": {}, "n_requests": n_req, "slots": slots,
+                        "rate_scale": RATE_SCALE,
+                        "mean_service_s": mean_service}
+    for load in LOADS:
+        trace = generate(base, plat.n, LoadGenConfig(
+            process="poisson", n_requests=n_req, offered_load=load,
+            seed=11), mean_service / slots)
+        arms = {}
+        for name, continuous in (("drain", False), ("continuous", True)):
+            m = _metrics(_serve(trace, plat, agent, continuous=continuous,
+                                slots=slots))
+            arms[name] = m
+            for k in ("p50_latency_s", "p99_latency_s", "p999_latency_s",
+                      "goodput_rps", "shed_rate"):
+                rows.append(row(f"serve_load/load{load}/{name}/{k}", 0.0,
+                                round(m[k], 5)))
+        result["loads"][str(load)] = arms
+
+    # bursty info arm (Gamma arrivals at the top load, both modes)
+    btrace = generate(base, plat.n, LoadGenConfig(
+        process="gamma", burstiness=4.0, n_requests=n_req,
+        offered_load=max(LOADS), seed=12), mean_service / slots)
+    result["bursty"] = {
+        name: _metrics(_serve(btrace, plat, agent, continuous=c,
+                              slots=slots))
+        for name, c in (("drain", False), ("continuous", True))}
+
+    # sharded-wave parity: same trace, lane axis over the routes mesh
+    # (slots=3 exercises the pad-to-mesh-and-trim path on >1 devices)
+    from repro.compat import make_mesh
+    mesh = make_mesh((len(jax.devices()),), ("routes",))
+    ptrace = generate(base, plat.n, LoadGenConfig(
+        process="poisson", n_requests=min(n_req, 12), offered_load=1.5,
+        seed=13), mean_service / 3)
+    parity = {}
+    for name, continuous in (("drain", False), ("continuous", True)):
+        single = _serve(ptrace, plat, agent, continuous=continuous,
+                        slots=3)
+        sharded = _serve(ptrace, plat, agent, continuous=continuous,
+                         slots=3, mesh=mesh)
+        parity[name] = digests_equal(serving_digest(single),
+                                     serving_digest(sharded))
+    result["sharded_parity_devices"] = len(jax.devices())
+    result["sharded_parity"] = {k: bool(v) for k, v in parity.items()}
+
+    # measured-service-time calibration (info only: wall-clock EMA of a
+    # CPU host's jit dispatch — never gated, the virtual clock is)
+    meng = _engine(plat, agent, continuous=False, slots=slots,
+                   measured=True)
+    for r in generate(base, plat.n, LoadGenConfig(
+            n_requests=6, offered_load=1.0, seed=14), mean_service / slots):
+        meng.submit(r.tasks, arrival=r.arrival, deadline=r.arrival + 1e9)
+    meng.run_until_done()
+    result["measured_svc"] = {
+        "virtual_svc_per_task_s": probe.svc,
+        "ema_per_slot_s": {f"{b}x{s}": v for (b, s), v
+                           in sorted(meng._svc_measured.items())},
+        "wall_time_s": meng.now}
+
+    top, low = str(max(LOADS)), str(min(LOADS))
+    by = result["loads"]
+    gate = {
+        "continuous_goodput_wins_overload": (
+            by[top]["continuous"]["goodput_rps"]
+            > by[top]["drain"]["goodput_rps"]),
+        "no_p99_regression_underload": (
+            by[low]["continuous"]["p99_latency_s"]
+            <= by[low]["drain"]["p99_latency_s"] * 1.05 + 1e-9),
+        "sharded_parity": all(parity.values()),
+    }
+    result["gate"] = gate
+    for k, v in gate.items():
+        rows.append(row(f"serve_load/{k}", 0.0, v))
+    save("serve_load", rows)
+    result["host_tuning"] = host_tuning()
+    with open(os.path.join(os.getcwd(), "BENCH_load.json"), "w") as f:
+        json.dump(result, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=os.environ.get("BENCH_FULL", "") != "1"):
+        print(r["name"], r["derived"])

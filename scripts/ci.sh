@@ -48,6 +48,11 @@
 #    TD-update trajectory pin (<= 1e-5), and the CPU-trainer structural
 #    no-regression (default path pallas-free, td_kernel=False trace
 #    identical to the default).
+# 12. Open-loop load gate (BENCH_load.json, 2 forced host devices):
+#    continuous-batching EDF must beat drain-wave EDF on goodput at
+#    offered load 2.0 with no p99 latency regression at load 0.5, and
+#    sharded waves must reproduce the single-device serving digest
+#    bit-exactly on the parity trace (drain and continuous modes).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -97,6 +102,30 @@ print(f"edf_never_worse={r['edf_never_worse']} "
 sys.exit(0 if ok else 1)
 EOF
 serve_bench=$?
+
+echo "== open-loop load gate (continuous vs drain, sharded parity; 2 devices) =="
+# forced 2 host devices so the sharded-wave parity trace actually splits
+# lanes across devices (slots=3 also exercises the pad-and-trim path);
+# the gate itself stays seeded/deterministic on the virtual clock
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
+    python -m benchmarks.run --only serve_load \
+    && python - <<'EOF'
+import json, sys
+r = json.load(open("BENCH_load.json"))
+g = r["gate"]
+ok = (g["continuous_goodput_wins_overload"]
+      and g["no_p99_regression_underload"] and g["sharded_parity"])
+top = max(r["loads"], key=float)
+arms = r["loads"][top]
+print(f"goodput@load{top}: continuous "
+      f"{arms['continuous']['goodput_rps']:.2f}/s vs drain "
+      f"{arms['drain']['goodput_rps']:.2f}/s "
+      f"p99_ok={g['no_p99_regression_underload']} "
+      f"sharded_parity={g['sharded_parity']} "
+      f"(devices={r['sharded_parity_devices']})")
+sys.exit(0 if ok else 1)
+EOF
+serve_load=$?
 
 echo "== durability suite (incl. SIGKILL recovery + elastic resume) =="
 python -m pytest -q --runslow tests/test_durability.py
@@ -239,12 +268,13 @@ sys.exit(0 if ok else 1)
 EOF
 train_bench=$?
 
-echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} durability_exit=${durability} recovery_exit=${recovery} scenarios_exit=${scenarios} kern_interp_exit=${kern_interp} kern_compiled_exit=${kern_compiled} kern_bench_exit=${kern_bench} =="
+echo "== summary: tier1_exit=${tier1} parity_exit=${parity} sharded_exit=${sharded} dp_exit=${dp} pipeline_exit=${pipeline} bench_exit=${bench} train_bench_exit=${train_bench} serve_prop_exit=${serve_prop} serve_bench_exit=${serve_bench} serve_load_exit=${serve_load} durability_exit=${durability} recovery_exit=${recovery} scenarios_exit=${scenarios} kern_interp_exit=${kern_interp} kern_compiled_exit=${kern_compiled} kern_bench_exit=${kern_bench} =="
 [ "${tier1}" -eq 0 ] && [ "${parity}" -eq 0 ] && [ "${sharded}" -eq 0 ] \
     && [ "${dp}" -eq 0 ] && [ "${pipeline}" -eq 0 ] \
     && [ "${bench}" -eq 0 ] \
     && [ "${train_bench}" -eq 0 ] && [ "${serve_prop}" -eq 0 ] \
-    && [ "${serve_bench}" -eq 0 ] && [ "${durability}" -eq 0 ] \
+    && [ "${serve_bench}" -eq 0 ] && [ "${serve_load}" -eq 0 ] \
+    && [ "${durability}" -eq 0 ] \
     && [ "${recovery}" -eq 0 ] && [ "${scenarios}" -eq 0 ] \
     && [ "${kern_interp}" -eq 0 ] && [ "${kern_compiled}" -eq 0 ] \
     && [ "${kern_bench}" -eq 0 ]

@@ -15,6 +15,12 @@ shedding; ``--deadline-scale`` tightens/relaxes the Table-5 budgets:
 
     PYTHONPATH=src python -m repro.launch.serve --placement --qos edf \
         --routes 8 --route-km 0.01 --arrival-gap 0.02
+
+Production-serving extras (ISSUE 10): ``--continuous`` refills freed
+wave lanes at segment boundaries instead of draining, ``--measured-svc``
+replaces the virtual service clock with a measured per-bucket EMA, and
+``--shard`` now also shards plain (non-durable) QoS waves over the
+``("routes",)`` mesh — bit-exact against the single-device path.
 """
 from __future__ import annotations
 
@@ -92,9 +98,12 @@ def run_qos_placement_serving(args) -> int:
     from repro.serve.qos import QoSConfig, QoSPlacementEngine
 
     durable = _durable_mode(args)
-    if args.shard and not durable:
-        print("note: plain QoS placement serving is single-device "
-              "(--shard needs a durability flag, e.g. --resume)")
+    if durable and (args.continuous or args.measured_svc):
+        print("--continuous/--measured-svc are incompatible with "
+              "durability flags (the snapshot format packs whole-wave "
+              "checkpoints and crash replay needs the deterministic "
+              "virtual clock)")
+        return 1
     if args.stages > 1 and durable:
         print("--stages > 1 is incompatible with durability flags "
               "(pipeline waves checkpoint (state, ring); the snapshot "
@@ -122,7 +131,8 @@ def run_qos_placement_serving(args) -> int:
                     deadline_scale=args.deadline_scale
                     if args.deadline_scale is not None else 1.0,
                     slots=args.slots, min_bucket=args.min_bucket,
-                    stages=args.stages)
+                    stages=args.stages, continuous=args.continuous,
+                    measured_svc=args.measured_svc)
 
     if durable:
         from repro.serve.durability import (DurableQoSEngine,
@@ -159,8 +169,18 @@ def run_qos_placement_serving(args) -> int:
                 mesh=mesh, guard=guard, trace=args.trace,
                 segment_sleep=args.segment_sleep)
     else:
+        mesh = None
+        if args.shard:
+            if args.stages > 1:
+                print("--shard is single-stage (pipeline waves have "
+                      "their own 2-D mesh path)")
+                return 1
+            from repro.compat import make_mesh
+            n_dev = len(jax.devices())
+            mesh = make_mesh((n_dev,), ("routes",))
+            print(f"QoS wave mesh: {n_dev} device(s) on axis 'routes'")
         eng = QoSPlacementEngine(plat, params, cfg,
-                                 backlog_scale=backlog_scale)
+                                 backlog_scale=backlog_scale, mesh=mesh)
 
     if not args.resume:
         gap = args.arrival_gap if args.arrival_gap is not None else 0.05
@@ -188,7 +208,8 @@ def run_qos_placement_serving(args) -> int:
     print(f"qos[{s['policy']}] served {s['completed']}/{s['submitted']} "
           f"routes in {dt:.2f}s wall ({s['virtual_time_s']:.3f}s virtual): "
           f"miss_rate {s['miss_rate']:.3f} shed {s['shed']} "
-          f"preemptions {s['preemptions']} p50_slack {s['p50_slack_s']:.4f}s "
+          f"preemptions {s['preemptions']} refills {s['refills']} "
+          f"p50_slack {s['p50_slack_s']:.4f}s "
           f"p99_slack {s['p99_slack_s']:.4f}s "
           f"mean_stm {s['mean_stm_rate']:.3f}")
     if durable:
@@ -272,6 +293,14 @@ def main(argv=None) -> int:
                     help="pipeline stages per wave (>1 serves stage-level "
                          "placements via core.pipeline; QoS mode only, "
                          "incompatible with durability flags)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: refill freed wave lanes at "
+                         "segment boundaries instead of draining (QoS "
+                         "mode only, incompatible with durability flags)")
+    ap.add_argument("--measured-svc", action="store_true",
+                    help="advance the serving clock by measured segment "
+                         "wall time (per-bucket EMA) instead of the "
+                         "deterministic virtual constant")
     ap.add_argument("--weights", type=str, default=None,
                     help="npz of trained EvalNet weights")
     ap.add_argument("--seed", type=int, default=0)
@@ -312,6 +341,7 @@ def main(argv=None) -> int:
         # batch service has no timeline for them to act on
         if (args.qos is not None or args.arrival_gap is not None
                 or args.deadline_scale is not None or args.stages > 1
+                or args.continuous or args.measured_svc
                 or _durable_mode(args)):
             return run_qos_placement_serving(args)
         return run_placement_serving(args)

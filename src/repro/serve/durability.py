@@ -459,6 +459,15 @@ class DurableQoSEngine(QoSPlacementEngine):
                 "durability does not support pipeline waves (stages > 1): "
                 "snapshots and fault-masked executors cover the lockstep "
                 "(state)-only checkpoint, not (state, ring)")
+        if cfg.continuous:
+            raise ValueError(
+                "durability does not support continuous batching yet: the "
+                "snapshot format packs whole-wave checkpoints, not per-lane "
+                "cursors (ROADMAP follow-up)")
+        if cfg.measured_svc:
+            raise ValueError(
+                "durability requires the virtual clock: measured service "
+                "times would break bit-exact crash replay")
         super().__init__(platform, params, cfg,
                          backlog_scale=backlog_scale, executor=executor)
         self._stub = executor is not None

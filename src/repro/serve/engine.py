@@ -73,12 +73,20 @@ class Request:
     submit_time: float = 0.0
     finish_time: "float | None" = None
     waves_waited: int = 0
+    # decode tokens the admission pricing promised (wave-padding-aware
+    # cap applied); delivery below this is a pricing bug, not truncation
+    priced_tokens: "int | None" = None
 
     @property
     def slack(self) -> "float | None":
         if self.deadline is None or self.finish_time is None:
             return None
         return self.deadline - self.finish_time
+
+    @property
+    def submit_order(self) -> int:
+        # QoSPolicy sort-key protocol (ties inside one wave break on uid)
+        return self.uid
 
 
 class FlexAIPlacementService:
@@ -221,8 +229,10 @@ class ServeEngine:
                  pad_token: int = 0, qos: str = "fifo",
                  deadline_scale: float = 1.0, aging_credit: float = 4.0,
                  shed: bool = True):
+        from repro.serve.policy import QoSPolicy
         if qos not in ("fifo", "edf"):
             raise ValueError(f"unknown qos policy {qos!r}")
+        self._qpolicy: "QoSPolicy | None" = None
         self.api = api
         self.params = params
         self.slots = slots
@@ -243,17 +253,44 @@ class ServeEngine:
         self.clock = 0.0          # virtual step clock (1.0 per decode step)
         self.wave_log: list[list[int]] = []
 
+    @property
+    def qpolicy(self):
+        """The shared EDF/aging/shed formula object (serve.policy) —
+        rebuilt lazily so the ``qos`` / ``aging_credit`` / ``shed``
+        attributes stay live knobs (tests flip them post-construction)."""
+        from repro.serve.policy import QoSPolicy
+        p = self._qpolicy
+        if (p is None or p.policy != self.qos
+                or p.aging_credit != self.aging_credit
+                or p.shed != self.shed):
+            p = QoSPolicy(policy=self.qos, aging_credit=self.aging_credit,
+                          shed=self.shed)
+            self._qpolicy = p
+        return p
+
+    def _token_cap(self, req: Request) -> int:
+        """Decode tokens ``max_seq`` can guarantee this request *in a
+        wave*: co-batched peers share the request's power-of-two length
+        bucket, so the wave's common prompt padding can push ``pos`` up
+        to ``bucket - 1`` before the first decode step.  Capping by the
+        request's own prompt length (the old formula) over-promised a
+        short prompt co-batched with a long one — it was priced and
+        shed-tested for tokens the lockstep decode loop could never
+        reach (ISSUE 10 bugfix).  Any bucket peer keeps >= 1 token of
+        budget, so the wave's prompt length is at most ``bucket - 1``
+        and this bound is tight."""
+        return 1 + max(0, self.max_seq - self._length_bucket(req))
+
     def submit(self, req: Request) -> None:
         from repro.core.tasks import token_deadline_budget
         req.submit_time = self.clock
+        # price the deadline for the tokens a wave can actually deliver,
+        # so a truncated request cannot buy easy slack from a budget it
+        # will never consume
+        req.priced_tokens = min(req.max_new_tokens, self._token_cap(req))
         if req.deadline is None:
-            # price the deadline for the tokens max_seq can actually
-            # deliver, so a truncated request cannot buy easy slack from
-            # a budget it will never consume
-            cap = 1 + max(0, self.max_seq - 1 - len(req.prompt))
             req.deadline = self.clock + token_deadline_budget(
-                len(req.prompt), min(req.max_new_tokens, cap),
-                self.deadline_scale)
+                len(req.prompt), req.priced_tokens, self.deadline_scale)
         self.queue.append(req)
 
     def _merge_cache(self, prefill_cache):
@@ -287,23 +324,21 @@ class ServeEngine:
             max(len(req.prompt) + req.max_new_tokens, 1), 1)
 
     def _eff_deadline(self, req: Request) -> float:
-        """EDF comparison key (shared formula: serve.qos.effective_deadline
-        — the placement engine and this token engine must never drift)."""
-        from repro.serve.qos import effective_deadline
-        return effective_deadline(req.deadline, req.waves_waited,
-                                  self.aging_credit)
+        """EDF comparison key (shared object: serve.policy.QoSPolicy —
+        the placement engine and this token engine must never drift)."""
+        return self.qpolicy.eff_deadline(req.deadline, req.waves_waited)
 
     def _shed_overdue(self) -> None:
         """Timeout shedding: a queued request that cannot finish its decode
         budget before its deadline moves to the dead-letter log."""
         keep = []
         for req in self.queue:
-            # finish lands at clock + max_new ticks (the prefill+first-token
-            # tick covers token 1, then max_new - 1 decode ticks) — capped
-            # by the decode steps max_seq can actually hold for this prompt
-            cap = 1 + max(0, self.max_seq - 1 - len(req.prompt))
-            need = float(max(min(req.max_new_tokens, cap), 1))
-            if self.clock + need > req.deadline:
+            # finish lands at clock + priced ticks (the prefill+first-token
+            # tick covers token 1, then priced - 1 decode ticks) — the
+            # wave-bucket-aware cap applied at submit
+            need = float(max(min(req.max_new_tokens, self._token_cap(req)),
+                             1))
+            if self.qpolicy.should_shed(self.clock, need, req.deadline):
                 req.finish_time = self.clock
                 self.dead_letter.append(req)
             else:
@@ -324,17 +359,15 @@ class ServeEngine:
                 self._shed_overdue()
             if not self.queue:
                 return []
-            head = min(self.queue,
-                       key=lambda r: (self._eff_deadline(r), r.uid))
+            head = min(self.queue, key=self.qpolicy.request_key)
             bucket = self._length_bucket(head)
             peers = sorted(
                 (r for r in self.queue if self._length_bucket(r) == bucket),
-                key=lambda r: (self._eff_deadline(r), r.uid))
+                key=self.qpolicy.request_key)
             wave = peers[: self.slots]
             taken = {id(r) for r in wave}
             self.queue = [r for r in self.queue if id(r) not in taken]
-            for r in self.queue:
-                r.waves_waited += 1
+            self.qpolicy.age(self.queue)
         else:
             bucket = self._length_bucket(self.queue[0])
             wave, rest = [], []
@@ -410,24 +443,31 @@ class ServeEngine:
             self._run_wave(wave)
 
     def qos_stats(self) -> dict:
-        """Deadline bookkeeping over everything served so far."""
-        shed = len(self.dead_letter)
-        missed = sum(1 for r in self.finished
-                     if r.slack is not None and r.slack < 0.0)
-        total = len(self.finished) + shed
-        slacks = [r.slack for r in self.finished if r.slack is not None]
+        """Deadline bookkeeping over everything served so far (resolved
+        requests only — the shared ``QoSPolicy.miss_stats`` contract)."""
+        ms = self.qpolicy.miss_stats([r.slack for r in self.finished],
+                                     len(self.dead_letter))
         return {
             "policy": self.qos,
             "finished": len(self.finished),
-            "shed": shed,
+            "queued": len(self.queue),
+            "shed": ms["shed"],
             # requests cut short by max_seq got partial service; they are
             # reported separately rather than silently counted as met
             "truncated": sum(1 for r in self.finished
                              if len(r.generated) < r.max_new_tokens),
-            "missed_deadline": missed,
-            "miss_rate": ((missed + shed) / total) if total else 0.0,
-            "p50_slack": float(np.percentile(slacks, 50)) if slacks else 0.0,
-            "p99_slack": float(np.percentile(slacks, 99)) if slacks else 0.0,
+            # delivery below the priced budget would mean admission and
+            # the lockstep decode loop disagree again — pinned at 0 by
+            # the mixed-prompt regression test
+            "short_changed": sum(
+                1 for r in self.finished
+                if r.priced_tokens is not None
+                and len(r.generated) < min(r.priced_tokens,
+                                           r.max_new_tokens)),
+            "missed_deadline": ms["missed_deadline"],
+            "miss_rate": ms["miss_rate"],
+            "p50_slack": ms["p50_slack"],
+            "p99_slack": ms["p99_slack"],
             "mean_turnaround": float(np.mean(
                 [r.finish_time - r.submit_time for r in self.finished]))
             if self.finished else 0.0,

@@ -1,0 +1,128 @@
+"""Shared QoS policy object (ISSUE 10).
+
+``ServeEngine`` (token serving) and ``QoSPlacementEngine`` (placement
+serving) grew the same deadline discipline twice: EDF sort keys over an
+aging-credited effective deadline, per-wave aging bookkeeping, the
+timeout-shed predicate, and resolved-request miss/slack stats.  This
+module is the single home for all of it — both engines construct a
+:class:`QoSPolicy` and route every formula through it, so the two
+serving layers cannot drift apart again.
+
+``power_of_two_bucket`` and ``effective_deadline`` live here too (they
+were already shared); ``serve.qos`` re-exports them for compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+POLICIES = ("edf", "fifo")
+
+
+def power_of_two_bucket(n: int, minimum: int) -> int:
+    """Power-of-two length bucket >= max(n, minimum) — the shared shape
+    quantization of every wave engine (lockstep cost is set by the
+    longest member, so co-batching only makes sense within a bucket).
+
+    ``minimum`` must be >= 1: doubling from 0 (or a negative) never
+    reaches ``n``, which used to hang the caller forever.
+    """
+    if minimum < 1:
+        raise ValueError(
+            f"power_of_two_bucket minimum must be >= 1, got {minimum}")
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def effective_deadline(deadline: float, waves_waited: int,
+                       aging_credit: float) -> float:
+    """EDF comparison key shared by the token and placement engines: the
+    absolute deadline minus the aging credit earned per passed-over wave.
+    Co-submitted cohorts age together (the credit cancels within them);
+    it is earned against *later* arrivals, which is what bounds
+    cross-bucket starvation (tests/test_serve_properties.py)."""
+    return deadline - aging_credit * waves_waited
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSPolicy:
+    """The deadline discipline both serving engines share.
+
+    Holds exactly the knobs the shared formulas need — admission policy,
+    aging credit, and whether timeout shedding is armed.  Engine-specific
+    knobs (slots, chunking, preemption laxity, service model) stay with
+    the engines.
+    """
+    policy: str = "edf"
+    aging_credit: float = 0.0
+    shed: bool = True
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+    @property
+    def is_edf(self) -> bool:
+        return self.policy == "edf"
+
+    # ---- EDF ordering --------------------------------------------------
+
+    def eff_deadline(self, deadline: float, waves_waited: int) -> float:
+        return effective_deadline(deadline, waves_waited, self.aging_credit)
+
+    def request_key(self, req):
+        """Admission sort key for anything with ``deadline`` /
+        ``waves_waited`` / ``submit_order`` attributes: EDF on the
+        effective deadline (submit order breaks ties) under "edf",
+        plain submit order under "fifo"."""
+        if self.is_edf:
+            return (self.eff_deadline(req.deadline, req.waves_waited),
+                    req.submit_order)
+        return (req.submit_order,)
+
+    # ---- shedding ------------------------------------------------------
+
+    def should_shed(self, now: float, service_need: float,
+                    deadline: float) -> bool:
+        """Timeout-shed predicate: the request's remaining service no
+        longer fits before its deadline (it would only burn capacity a
+        feasible request could use)."""
+        return self.shed and now + service_need > deadline
+
+    # ---- aging ---------------------------------------------------------
+
+    @staticmethod
+    def age(waiters) -> None:
+        """One admission round passed a set of waiters over: each earns
+        one wave of aging credit.  Works on requests and on checkpointed
+        waves alike (anything with ``waves_waited``)."""
+        for w in waiters:
+            w.waves_waited += 1
+
+    # ---- stats ---------------------------------------------------------
+
+    @staticmethod
+    def miss_stats(slacks, n_shed: int) -> dict:
+        """Resolved-request miss/slack summary.
+
+        The denominator is *resolved* requests only (completed + shed) —
+        never pending/backlog/in-flight work that has no verdict yet, so
+        a mid-drain read is not silently optimistic (ISSUE 10 bugfix).
+        """
+        slacks = np.asarray([s for s in slacks if s is not None], np.float64)
+        missed = int((slacks < 0.0).sum()) if slacks.size else 0
+        resolved = int(slacks.size) + int(n_shed)
+        return {
+            "resolved": resolved,
+            "completed": int(slacks.size),
+            "shed": int(n_shed),
+            "missed_deadline": missed,
+            "miss_rate": ((missed + n_shed) / resolved) if resolved else 0.0,
+            "p50_slack": float(np.percentile(slacks, 50)) if slacks.size
+            else 0.0,
+            "p99_slack": float(np.percentile(slacks, 99)) if slacks.size
+            else 0.0,
+        }

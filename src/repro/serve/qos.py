@@ -25,7 +25,11 @@ seconds per lockstep task slot (padding included — the static-shape wave
 pays for its padding, exactly like the real engine).  That keeps every
 admission decision, preemption point and miss/shed verdict deterministic,
 which is what the property suite and the CI gate need; wall-clock serving
-latency rides on top without changing any decision.
+latency rides on top without changing any decision.  With
+``cfg.measured_svc`` the clock is instead advanced by *measured* segment
+wall time and a per-(bucket, stages) EMA of it replaces the constant in
+shedding/preemption decisions, so admission tracks the hardware the pool
+actually has (virtual stays the deterministic fallback — see DESIGN.md).
 
 Placements are real: each wave dispatches through the vmapped greedy scan
 engine (``flexai.engine._schedule_run`` with ``state0`` resume), so
@@ -44,10 +48,30 @@ the same service time as its unpipelined twin up to the (S-1)-column
 drain bubble.  Params must come from a stage-level agent
 (``PipelineFlexAI``); the durability layer does not support pipeline
 waves (gated off in ``launch/serve.py`` and ``DurableQoSEngine``).
+
+Two production paths land on top (ISSUE 10):
+
+* **Sharded waves** (``mesh=``): the wave's lane axis is shard_mapped
+  over the ``("routes",)`` mesh, lanes padded to the mesh size with
+  invalid rows + fresh states and trimmed back — per-lane scans are
+  independent, so placements are bit-exact vs the single-device path
+  (the parity trace in ``benchmarks/serve_load.py`` pins it).
+
+* **Continuous batching** (``cfg.continuous``): instead of draining a
+  wave before re-admitting, a freed lane (completed — or shed mid-flight
+  once its remaining service can no longer meet its deadline) is
+  refilled at the next segment boundary from the backlog, JetStream
+  prefill-insert style.  Refill only admits the request global admission
+  would pick next (and only if its bucket matches the in-flight wave),
+  so EDF ordering and the aging starvation bound survive; the refilled
+  lane's ``PlatformState`` row is reinitialized, and the wave remains a
+  preemptible checkpointed unit with per-lane cursors.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import OrderedDict
 from typing import Callable, Optional
 
 import jax
@@ -57,9 +81,17 @@ from repro.core.platform_jax import (PlatformState, platform_init,
                                      spec_from_platform, stack_states,
                                      summarize)
 from repro.core.tasks import (TaskArrays, invalid_task_arrays,
-                              kind_period_table, pad_task_arrays,
-                              route_deadline_budget, stack_task_arrays,
-                              tasks_to_arrays)
+                              kind_period_table, pad_route_batch,
+                              pad_task_arrays, route_deadline_budget,
+                              stack_task_arrays, tasks_to_arrays)
+from repro.serve.policy import (QoSPolicy, effective_deadline,
+                                power_of_two_bucket)
+
+__all__ = [
+    "QoSConfig", "QoSPlacementEngine", "RouteRequest", "Wave", "QoSPolicy",
+    "power_of_two_bucket", "effective_deadline",
+    "QUEUED", "RUNNING", "PREEMPTED", "COMPLETED", "SHED",
+]
 
 QUEUED = "queued"
 RUNNING = "running"
@@ -67,41 +99,49 @@ PREEMPTED = "preempted"
 COMPLETED = "completed"
 SHED = "shed"
 
-
-def power_of_two_bucket(n: int, minimum: int) -> int:
-    """Power-of-two length bucket >= max(n, minimum) — the shared shape
-    quantization of every wave engine (lockstep cost is set by the
-    longest member, so co-batching only makes sense within a bucket)."""
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
+# A long-lived serving process churns platforms/meshes; the compiled
+# segment closures it no longer uses must not accumulate forever.
+_SEG_FN_CACHE_CAP = 8
+_SEG_FN_CACHE: "OrderedDict" = OrderedDict()
 
 
-def effective_deadline(deadline: float, waves_waited: int,
-                       aging_credit: float) -> float:
-    """EDF comparison key shared by the token and placement engines: the
-    absolute deadline minus the aging credit earned per passed-over wave.
-    Co-submitted cohorts age together (the credit cancels within them);
-    it is earned against *later* arrivals, which is what bounds
-    cross-bucket starvation (tests/test_serve_properties.py)."""
-    return deadline - aging_credit * waves_waited
+def _seg_cache_get(key, build):
+    """LRU-bounded lookup into the shared compiled-closure cache."""
+    if key in _SEG_FN_CACHE:
+        _SEG_FN_CACHE.move_to_end(key)
+        return _SEG_FN_CACHE[key]
+    fn = build()
+    _SEG_FN_CACHE[key] = fn
+    while len(_SEG_FN_CACHE) > _SEG_FN_CACHE_CAP:
+        _SEG_FN_CACHE.popitem(last=False)
+    return fn
 
 
-_SEG_FN_CACHE: dict = {}
-
-
-def _segment_fn(spec, backlog_scale: float):
+def _segment_fn(spec, backlog_scale: float, mesh=None):
     """Jitted vmapped resume-able scan segment, cached on the table
     contents (two engines over the same platform share one compiled
-    closure — the benchmark builds six engines per run)."""
+    closure — the benchmark builds six engines per run).  With ``mesh``
+    the lane axis is shard_mapped over the mesh's route axis; callers
+    pad lanes to the mesh size."""
     key = (np.asarray(spec.exec_time).tobytes(),
-           np.asarray(spec.energy).tobytes(), float(backlog_scale))
-    if key not in _SEG_FN_CACHE:
+           np.asarray(spec.energy).tobytes(), float(backlog_scale),
+           None if mesh is None else (mesh.devices.shape, mesh.axis_names))
+
+    def build():
         from repro.core.flexai.engine import _schedule_run
         run = _schedule_run(spec, backlog_scale)
-        _SEG_FN_CACHE[key] = jax.jit(jax.vmap(run, in_axes=(None, 0, 0)))
-    return _SEG_FN_CACHE[key]
+        vm = jax.vmap(run, in_axes=(None, 0, 0))
+        if mesh is None:
+            return jax.jit(vm)
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import shard_map
+        ax = mesh.axis_names[0]
+        return jax.jit(shard_map(vm, mesh=mesh,
+                                 in_specs=(P(), P(ax), P(ax)),
+                                 out_specs=(P(ax), P(ax))))
+
+    return _seg_cache_get(key, build)
 
 
 def _pipeline_segment_fn(spec, plan, backlog_scale: float):
@@ -112,13 +152,14 @@ def _pipeline_segment_fn(spec, plan, backlog_scale: float):
     key = (np.asarray(spec.exec_time).tobytes(),
            np.asarray(plan.stage_exec).tobytes(),
            np.asarray(plan.groups).tobytes(), float(backlog_scale))
-    if key not in _SEG_FN_CACHE:
+
+    def build():
         from repro.core.pipeline import _pipeline_segment_run
         run = _pipeline_segment_run(spec, plan, backlog_scale,
                                     policy="flexai")
-        _SEG_FN_CACHE[key] = jax.jit(
-            jax.vmap(run, in_axes=(None, 0, None, 0, 0)))
-    return _SEG_FN_CACHE[key]
+        return jax.jit(jax.vmap(run, in_axes=(None, 0, None, 0, 0)))
+
+    return _seg_cache_get(key, build)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,14 +184,35 @@ class QoSConfig:
     min_bucket: int = 16             # power of two, >= chunk
     max_preemptions: int = 4         # per wave (livelock guard)
     stages: int = 1                  # >1: pipeline waves (core.pipeline)
+    continuous: bool = False         # refill freed lanes at segment
+                                     # boundaries instead of draining
+    measured_svc: bool = False       # EMA-calibrated measured service
+                                     # times (virtual clock = fallback)
+    svc_ema: float = 0.25            # EMA weight of a new measurement
 
     def __post_init__(self):
         if self.policy not in ("edf", "fifo"):
             raise ValueError(f"unknown policy {self.policy!r}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.min_bucket < 1:
+            raise ValueError(
+                f"min_bucket must be >= 1, got {self.min_bucket}")
+        if self.min_bucket & (self.min_bucket - 1):
+            raise ValueError(
+                f"min_bucket must be a power of two, got {self.min_bucket}")
         if self.min_bucket % self.chunk:
             raise ValueError("min_bucket must be a multiple of chunk")
         if self.stages < 1:
             raise ValueError("stages must be >= 1")
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if not (0.0 < self.svc_ema <= 1.0):
+            raise ValueError(f"svc_ema must be in (0, 1], got {self.svc_ema}")
+        if self.continuous and self.stages > 1:
+            raise ValueError(
+                "continuous batching refills lockstep lanes; pipeline "
+                "waves (stages > 1) drain — pick one")
 
 
 @dataclasses.dataclass
@@ -194,6 +256,12 @@ class Wave:
     s_seq: Optional[np.ndarray] = None   # [flat_len] stage per flat slot
     ring: Optional[jax.Array] = None     # [slots, S] checkpoint half 2
     flat_len: Optional[int] = None       # padded wavefront length
+    # continuous batching (cfg.continuous): per-lane occupancy — the
+    # checkpoint widens to (state, lane cursors) but stays on the Wave,
+    # so preempt/resume is unchanged
+    lane_requests: Optional[list] = None  # [slots] RouteRequest | None
+    lane_progress: Optional[list] = None  # [slots] slots served per lane
+    lane_recs: Optional[list] = None      # [slots] per-lane record chunks
 
     def min_deadline(self, aging_credit: float) -> float:
         return min(effective_deadline(r.deadline, self.waves_waited,
@@ -234,11 +302,23 @@ class QoSPlacementEngine:
 
     def __init__(self, platform, params, cfg: QoSConfig = QoSConfig(), *,
                  backlog_scale: float = 1.0,
-                 executor: "Callable | str | None" = None):
+                 executor: "Callable | str | None" = None,
+                 mesh=None):
         self.spec = spec_from_platform(platform)
         self.params = params
         self.cfg = cfg
         self.backlog_scale = backlog_scale
+        self.qpolicy = QoSPolicy(policy=cfg.policy,
+                                 aging_credit=cfg.aging_credit,
+                                 shed=cfg.shed)
+        self.mesh = mesh
+        if mesh is not None and cfg.stages > 1:
+            raise ValueError("sharded waves are single-stage; pipeline "
+                             "waves have their own 2-D mesh path")
+        if mesh is not None and executor is not None:
+            raise ValueError("mesh sharding requires the device scan "
+                             "executor; stub/custom executors are host "
+                             "functions")
         self.svc = (cfg.svc_per_task if cfg.svc_per_task is not None
                     else 0.5 * float(kind_period_table().mean()))
         # a flat pipeline slot is one (task, stage) micro-step: charge
@@ -263,7 +343,12 @@ class QoSPlacementEngine:
         elif executor is not None:
             self._seg_fn = executor
         else:
-            self._seg_fn = _segment_fn(self.spec, backlog_scale)
+            self._seg_fn = _segment_fn(self.spec, backlog_scale, mesh=mesh)
+        # measured service times: per-(bucket, stages) EMA of wall-clock
+        # per-slot segment cost (cfg.measured_svc); None entries fall
+        # back to the virtual constant until the first dispatch lands
+        self._svc_measured: dict = {}
+        self._seg_elapsed: Optional[float] = None
         self.now = 0.0
         self._halt = False  # set by a durability hook to stop serving
         self._order = 0
@@ -275,6 +360,7 @@ class QoSPlacementEngine:
         self.wave_log: list[list[int]] = []
         self.dispatches = 0
         self.preemption_count = 0
+        self.refills = 0
 
     # ------------------------------------------------------------------
     # submission
@@ -291,13 +377,22 @@ class QoSPlacementEngine:
         return L + (-L) % self.cfg.chunk
 
     def _service_need(self, bucket: int) -> float:
-        """Virtual service time a bucket will be charged end to end —
-        what shedding and preemption decisions compare against deadlines
+        """Service time a bucket will be charged end to end — what
+        shedding and preemption decisions compare against deadlines
         (identical to ``bucket * svc`` when stages == 1).  ``set_health``
         stretches ``svc``, so a degraded pool's need grows and admission
-        sheds what no longer fits *before* dispatch."""
+        sheds what no longer fits *before* dispatch.  Under
+        ``cfg.measured_svc`` the per-(bucket, stages) EMA of measured
+        per-slot cost replaces the virtual constant once calibrated
+        (still scaled by the health stretch)."""
+        length = (self._flat_len(bucket) if self.cfg.stages > 1
+                  else bucket)
+        if self.cfg.measured_svc:
+            m = self._svc_measured.get((bucket, self.cfg.stages))
+            if m is not None:
+                return length * m * self.svc_scale
         if self.cfg.stages > 1:
-            return self._flat_len(bucket) * self.svc_step
+            return length * self.svc_step
         return bucket * self.svc
 
     def set_health(self, health) -> None:
@@ -350,8 +445,20 @@ class QoSPlacementEngine:
             self.backlog.append(self.pending.pop(0))
 
     def _eff_deadline(self, req: RouteRequest) -> float:
-        return effective_deadline(req.deadline, req.waves_waited,
-                                  self.cfg.aging_credit)
+        return self.qpolicy.eff_deadline(req.deadline, req.waves_waited)
+
+    def _shed_request(self, r: RouteRequest, reason: str,
+                      needed_s: float) -> None:
+        """Move one request to the dead-letter log (shared by queued-shed
+        and the continuous-mode mid-flight overrun shed)."""
+        r.status = SHED
+        r.finish = self.now
+        r.slack = r.deadline - self.now
+        self.dead_letter.append({
+            "uid": r.uid, "n_tasks": r.n_tasks,
+            "deadline": r.deadline, "shed_at": self.now,
+            "reason": reason, "needed_s": needed_s,
+            "had_s": r.deadline - self.now})
 
     def _shed_infeasible(self) -> None:
         """Timeout shedding: a queued request whose full service no longer
@@ -359,16 +466,9 @@ class QoSPlacementEngine:
         only burn a wave that a feasible request could use)."""
         keep = []
         for r in self.backlog:
-            if self.now + self._service_need(r.bucket) > r.deadline:
-                r.status = SHED
-                r.finish = self.now
-                r.slack = r.deadline - self.now
-                self.dead_letter.append({
-                    "uid": r.uid, "n_tasks": r.n_tasks,
-                    "deadline": r.deadline, "shed_at": self.now,
-                    "reason": "infeasible",
-                    "needed_s": self._service_need(r.bucket),
-                    "had_s": r.deadline - self.now})
+            need = self._service_need(r.bucket)
+            if self.qpolicy.should_shed(self.now, need, r.deadline):
+                self._shed_request(r, "infeasible", need)
             else:
                 keep.append(r)
         self.backlog = keep
@@ -378,17 +478,12 @@ class QoSPlacementEngine:
         eligible requests — EDF order under "edf", submit order under
         "fifo".  Everyone left behind ages one wave."""
         peers = [r for r in self.backlog if r.bucket == head.bucket]
-        if self.cfg.policy == "edf":
-            peers.sort(key=lambda r: (self._eff_deadline(r), r.submit_order))
-        else:
-            peers.sort(key=lambda r: r.submit_order)
+        peers.sort(key=self.qpolicy.request_key)
         wave_reqs = peers[: self.cfg.slots]
         taken = {r.uid for r in wave_reqs}
         self.backlog = [r for r in self.backlog if r.uid not in taken]
-        for r in self.backlog:
-            r.waves_waited += 1
-        for w in self.preempted:
-            w.waves_waited += 1
+        self.qpolicy.age(self.backlog)
+        self.qpolicy.age(self.preempted)
         for r in wave_reqs:
             r.status = RUNNING
         rows = [r.tasks for r in wave_reqs]
@@ -455,7 +550,7 @@ class QoSPlacementEngine:
         # EDF: fresh requests and preempted waves compete on effective
         # deadline; a resumed wave re-enters at its checkpoint
         best_req = min(self.backlog, default=None,
-                       key=lambda r: (self._eff_deadline(r), r.submit_order))
+                       key=self.qpolicy.request_key)
         best_wave = min(self.preempted, default=None,
                         key=lambda w: w.min_deadline(self.cfg.aging_credit))
         if best_wave is not None and (
@@ -469,10 +564,8 @@ class QoSPlacementEngine:
         """Re-admit a preempted wave at its checkpoint: same aging and
         wave_log bookkeeping as a fresh admission."""
         self.preempted.remove(wave)
-        for r in self.backlog:
-            r.waves_waited += 1
-        for w in self.preempted:
-            w.waves_waited += 1
+        self.qpolicy.age(self.backlog)
+        self.qpolicy.age(self.preempted)
         for r in wave.requests:
             r.status = RUNNING
         self.wave_log.append([r.uid for r in wave.requests])
@@ -489,9 +582,8 @@ class QoSPlacementEngine:
         # a waiter that can no longer make its deadline anyway (it will be
         # shed at the next admission) is not worth a checkpoint
         waiters = [self._eff_deadline(r) for r in self.backlog
-                   if not (self.cfg.shed
-                           and self.now + self._service_need(r.bucket)
-                           > r.deadline)]
+                   if not self.qpolicy.should_shed(
+                       self.now, self._service_need(r.bucket), r.deadline)]
         waiters += [w.min_deadline(self.cfg.aging_credit)
                     for w in self.preempted]
         if not waiters:
@@ -504,15 +596,60 @@ class QoSPlacementEngine:
     def _dispatch_segment(self, wave: Wave, seg: TaskArrays):
         """Serve one chunk: returns ``(new_state, records)``.  The
         durability layer swaps in fault-masked / mesh-sharded executors
-        here without touching the wave loop."""
+        here without touching the wave loop.  With a mesh the lane axis
+        is padded to the mesh size (invalid rows + fresh states) and
+        trimmed back — per-lane scans are independent, so sharding is
+        placement-neutral."""
+        if self.mesh is not None:
+            pad = (-self.cfg.slots) % self.mesh.size
+            if pad:
+                import jax.numpy as jnp
+                seg = pad_route_batch(seg, self.mesh.size)
+                state = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate(
+                        [jnp.asarray(a), jnp.asarray(b)]),
+                    wave.state,
+                    stack_states([platform_init(self.spec.n)] * pad))
+                st, recs = self._seg_fn(self.params, seg, state)
+                trim = lambda a: a[: self.cfg.slots]  # noqa: E731
+                return (jax.tree_util.tree_map(trim, st),
+                        jax.tree_util.tree_map(trim, recs))
         return self._seg_fn(self.params, seg, wave.state)
 
+    def _timed_dispatch(self, wave: Wave, seg: TaskArrays):
+        """Dispatch one segment, measuring wall time when the measured
+        service clock is armed: the blocking ``perf_counter`` window
+        feeds the per-(bucket, stages) EMA and is what ``_charge_segment``
+        advances the clock by for this segment."""
+        if not self.cfg.measured_svc:
+            return self._dispatch_segment(wave, seg)
+        t0 = time.perf_counter()
+        out = self._dispatch_segment(wave, seg)
+        jax.block_until_ready(out[0])
+        self._seg_elapsed = time.perf_counter() - t0
+        self._observe_service(wave.bucket, self._seg_elapsed)
+        return out
+
+    def _observe_service(self, bucket: int, elapsed: float) -> None:
+        per_slot = elapsed / self.cfg.chunk
+        key = (bucket, self.cfg.stages)
+        prev = self._svc_measured.get(key)
+        a = self.cfg.svc_ema
+        self._svc_measured[key] = (per_slot if prev is None
+                                   else (1.0 - a) * prev + a * per_slot)
+
     def _charge_segment(self, wave: Wave, recs) -> None:
-        """Advance the virtual clock for one served segment (the
-        durability layer charges degraded-core overruns here).  Pipeline
-        segments are chunks of flat (task, stage) micro-steps charged at
-        ``svc/stages`` each — identical to ``chunk * svc`` at one stage."""
-        self.now += self.cfg.chunk * self.svc_step
+        """Advance the clock for one served segment (the durability layer
+        charges degraded-core overruns here).  Pipeline segments are
+        chunks of flat (task, stage) micro-steps charged at
+        ``svc/stages`` each — identical to ``chunk * svc`` at one stage.
+        A measured segment charges its own blocking wall time instead of
+        the virtual constant."""
+        if self._seg_elapsed is not None:
+            self.now += self._seg_elapsed
+            self._seg_elapsed = None
+        else:
+            self.now += self.cfg.chunk * self.svc_step
 
     def _after_segment(self, wave: Wave) -> None:
         """Segment-boundary hook: fault firing, heartbeats, snapshot
@@ -525,6 +662,8 @@ class QoSPlacementEngine:
     # --------------------------------------------------------------------
 
     def _run_wave(self, wave: Wave) -> None:
+        if self.cfg.continuous and self.plan is None:
+            return self._run_wave_continuous(wave)
         chunk = self.cfg.chunk
         total = wave.flat_len if wave.flat_len is not None else wave.bucket
         while wave.progress < total:
@@ -532,12 +671,18 @@ class QoSPlacementEngine:
             seg = jax.tree_util.tree_map(
                 lambda a: a[:, p: p + chunk], wave.batch)
             if self.plan is not None:
+                t0 = (time.perf_counter() if self.cfg.measured_svc
+                      else None)
                 state, ring, recs = self._seg_fn(
                     self.params, seg, wave.s_seq[p: p + chunk],
                     wave.state, wave.ring)
+                if t0 is not None:
+                    jax.block_until_ready(state)
+                    self._seg_elapsed = time.perf_counter() - t0
+                    self._observe_service(wave.bucket, self._seg_elapsed)
                 wave.ring = ring
             else:
-                state, recs = self._dispatch_segment(wave, seg)
+                state, recs = self._timed_dispatch(wave, seg)
             self.dispatches += 1
             wave.state = state
             wave.recs.append(recs)
@@ -587,6 +732,164 @@ class QoSPlacementEngine:
             self._on_complete(req, lane_final, lane_recs)
             self.completed.append(req)
 
+    # ---- continuous batching (cfg.continuous) --------------------------
+
+    def _run_wave_continuous(self, wave: Wave) -> None:
+        """Continuous-batching wave loop (JetStream prefill-insert
+        style): lanes carry independent cursors, and at every segment
+        boundary a freed lane — completed, or shed mid-flight once its
+        remaining service cannot meet its deadline — is refilled from
+        the backlog with a reinitialized ``PlatformState`` row.  The
+        wave stays a preemptible checkpointed unit: ``(state, lane
+        cursors)`` lives on the Wave, so preempt/resume re-enters here
+        unchanged."""
+        chunk, slots = self.cfg.chunk, self.cfg.slots
+        if wave.lane_requests is None:
+            wave.lane_requests = (list(wave.requests)
+                                  + [None] * (slots - len(wave.requests)))
+            wave.lane_progress = [0] * slots
+            wave.lane_recs = [[] for _ in range(slots)]
+        idle_row = invalid_task_arrays(chunk)
+        while True:
+            rows = []
+            for lane in range(slots):
+                r = wave.lane_requests[lane]
+                if r is None:
+                    rows.append(idle_row)
+                else:
+                    p = wave.lane_progress[lane]
+                    rows.append(jax.tree_util.tree_map(
+                        lambda a: a[p: p + chunk], r.tasks))
+            seg = stack_task_arrays(rows)
+            state, recs = self._timed_dispatch(wave, seg)
+            self.dispatches += 1
+            wave.state = state
+            for lane in range(slots):
+                if wave.lane_requests[lane] is not None:
+                    wave.lane_recs[lane].append(jax.tree_util.tree_map(
+                        lambda a: a[lane], recs))
+                    wave.lane_progress[lane] += chunk
+            wave.progress += chunk
+            self._charge_segment(wave, recs)
+            self._promote_arrivals()
+            self._after_segment(wave)
+            if self._halt:
+                wave.requests = [r for r in wave.lane_requests
+                                 if r is not None]
+                return
+            for lane in range(slots):
+                r = wave.lane_requests[lane]
+                if (r is not None
+                        and wave.lane_progress[lane] >= wave.bucket):
+                    self._complete_lane(wave, lane)
+            self._shed_overrun_lanes(wave)
+            self._refill(wave)
+            wave.requests = [r for r in wave.lane_requests if r is not None]
+            if not wave.requests:
+                return
+            if self._should_preempt(wave):
+                wave.preemptions += 1
+                self.preemption_count += 1
+                for r in wave.requests:
+                    r.status = PREEMPTED
+                self.preempted.append(wave)
+                return
+
+    def _complete_lane(self, wave: Wave, lane: int) -> None:
+        """One lane reached its bucket: summarize exactly like a drained
+        wave's lane and free the slot for refill."""
+        r = wave.lane_requests[lane]
+        lane_recs = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+            *wave.lane_recs[lane])
+        lane_final = jax.tree_util.tree_map(
+            lambda a: a[lane], jax.device_get(wave.state))
+        summ = summarize(self.spec, lane_final, lane_recs)
+        summ["placements"] = np.asarray(lane_recs.action)[: r.n_tasks]
+        summ["bucket"] = wave.bucket
+        r.summary = summ
+        r.status = COMPLETED
+        r.finish = self.now
+        r.slack = r.deadline - self.now
+        self._on_complete(r, lane_final, lane_recs)
+        self.completed.append(r)
+        wave.lane_requests[lane] = None
+        wave.lane_progress[lane] = 0
+        wave.lane_recs[lane] = []
+
+    def _shed_overrun_lanes(self, wave: Wave) -> None:
+        """Mid-flight shed: a lane whose *remaining* service can no
+        longer meet its deadline is cut loose (the work already done is
+        sunk either way) so the lane can serve a feasible request — the
+        "shed member" source of freed lanes."""
+        if not self.qpolicy.is_edf or not self.cfg.shed:
+            return
+        per_slot = self._service_need(wave.bucket) / wave.bucket
+        for lane, r in enumerate(wave.lane_requests):
+            if r is None:
+                continue
+            need = (wave.bucket - wave.lane_progress[lane]) * per_slot
+            if self.qpolicy.should_shed(self.now, need, r.deadline):
+                self._shed_request(r, "overrun", need)
+                wave.lane_requests[lane] = None
+                wave.lane_progress[lane] = 0
+                wave.lane_recs[lane] = []
+
+    def _refill_head(self, wave: Wave) -> Optional[RouteRequest]:
+        """The request global admission would run next, or None if a
+        checkpointed wave (or nothing) should go first — refill must not
+        overtake the cross-bucket EDF/FIFO order, or aging's starvation
+        bound dies."""
+        if not self.backlog:
+            return None
+        if not self.qpolicy.is_edf:
+            if self.preempted:
+                return None
+            return min(self.backlog, key=lambda r: r.submit_order)
+        best_req = min(self.backlog, key=self.qpolicy.request_key)
+        best_wave = min(self.preempted, default=None,
+                        key=lambda w: w.min_deadline(self.cfg.aging_credit))
+        if best_wave is not None and (
+                best_wave.min_deadline(self.cfg.aging_credit)
+                <= self._eff_deadline(best_req)):
+            return None
+        return best_req
+
+    def _refill(self, wave: Wave) -> None:
+        """Admit backlog into freed lanes at a segment boundary.  Only
+        the global admission head is eligible, and only while it shares
+        the wave's bucket; a refill round that admits anyone counts as
+        an admission round for aging (everyone passed over earns a
+        wave of credit, same as ``_pack_wave``)."""
+        free = [lane for lane in range(self.cfg.slots)
+                if wave.lane_requests[lane] is None]
+        if not free:
+            return
+        if self.qpolicy.is_edf and self.cfg.shed:
+            self._shed_infeasible()
+        import jax.numpy as jnp
+        admitted = []
+        for lane in free:
+            head = self._refill_head(wave)
+            if head is None or head.bucket != wave.bucket:
+                break
+            self.backlog.remove(head)
+            head.status = RUNNING
+            wave.lane_requests[lane] = head
+            wave.lane_progress[lane] = 0
+            wave.lane_recs[lane] = []
+            wave.state = jax.tree_util.tree_map(
+                lambda a, b: jnp.asarray(a).at[lane].set(b),
+                wave.state, platform_init(self.spec.n))
+            admitted.append(head)
+        if admitted:
+            self.refills += len(admitted)
+            self.wave_log.append([r.uid for r in admitted])
+            self.qpolicy.age(self.backlog)
+            self.qpolicy.age(self.preempted)
+            wave.waves_waited = max(
+                [wave.waves_waited] + [r.waves_waited for r in admitted])
+
     def run_until_done(self, max_waves: int = 100_000) -> None:
         for _ in range(max_waves):
             if self._halt:
@@ -602,11 +905,18 @@ class QoSPlacementEngine:
     # ------------------------------------------------------------------
 
     def stats(self) -> dict:
-        """Serving-boundary QoS summary (what BENCH_serving.json reports)."""
-        submitted = self._order  # includes any currently-running wave
-        missed = sum(1 for r in self.completed if r.slack < 0.0)
+        """Serving-boundary QoS summary (what BENCH_serving.json reports).
+
+        Safe to read mid-drain: miss/slack rates denominate over
+        *resolved* requests only (completed + shed); work still pending,
+        queued, or in flight is reported separately instead of silently
+        deflating the miss rate (ISSUE 10 bugfix)."""
+        submitted = self._order
         shed = len(self.dead_letter)
-        slacks = np.asarray([r.slack for r in self.completed], np.float64)
+        ms = self.qpolicy.miss_stats(
+            [r.slack for r in self.completed], shed)
+        queued = len(self.backlog) + len(self.pending)
+        in_flight = submitted - ms["resolved"] - queued
         stm = [r.summary["stm_rate"] for r in self.completed
                if r.summary is not None and r.summary["tasks"] > 0]
         # task-weighted STM over the WHOLE submitted workload: a shed
@@ -620,19 +930,21 @@ class QoSPlacementEngine:
         return {
             "policy": self.cfg.policy,
             "submitted": submitted,
-            "completed": len(self.completed),
+            "resolved": ms["resolved"],
+            "in_flight": in_flight,
+            "queued": queued,
+            "completed": ms["completed"],
             "shed": shed,
-            "missed_deadline": missed,
-            "miss_rate": ((missed + shed) / submitted) if submitted else 0.0,
-            "p50_slack_s": float(np.percentile(slacks, 50)) if len(slacks)
-            else 0.0,
-            "p99_slack_s": float(np.percentile(slacks, 99)) if len(slacks)
-            else 0.0,
+            "missed_deadline": ms["missed_deadline"],
+            "miss_rate": ms["miss_rate"],
+            "p50_slack_s": ms["p50_slack"],
+            "p99_slack_s": ms["p99_slack"],
             "mean_stm_rate": float(np.mean(stm)) if stm else 0.0,
             "stm_rate_incl_shed": (met_tasks / total_tasks) if total_tasks
             else 0.0,
             "waves": len(self.wave_log),
             "preemptions": self.preemption_count,
             "dispatches": self.dispatches,
+            "refills": self.refills,
             "virtual_time_s": self.now,
         }

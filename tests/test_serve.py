@@ -144,6 +144,58 @@ def test_edf_timeout_shed_to_dead_letter():
     assert stats["miss_rate"] == pytest.approx(1 / 3)
 
 
+def test_mixed_prompt_pricing_uses_wave_padding_aware_cap():
+    """Truncation-pricing regression: a short prompt co-batched into a
+    long-prompt wave decodes in lockstep from the wave's padded position,
+    so ``max_seq`` can never deliver its naive per-request budget
+    (``max_seq - own_prompt``).  Pricing and timeout shedding must use
+    the wave-padding-aware cap: the old formula stamped the short request
+    a deadline bought with 14 tokens it could never consume, and shed it
+    against that same phantom need."""
+    from repro.core.tasks import token_deadline_budget
+    eng = _engine(slots=2, max_seq=16)
+    eng.qos = "edf"
+    long_r = Request(uid=0, prompt=np.arange(1, 13, dtype=np.int32),
+                     max_new_tokens=4, deadline=500.0)   # bucket 16
+    short_r = Request(uid=1, prompt=np.array([1, 2], np.int32),
+                      max_new_tokens=14)                 # bucket 16 too
+    eng.submit(long_r)
+    eng.submit(short_r)
+    # bucket 16 fills max_seq: only the prefill token is guaranteed
+    assert short_r.priced_tokens == 1
+    assert short_r.deadline == pytest.approx(token_deadline_budget(2, 1))
+    assert short_r.deadline < token_deadline_budget(2, 14)  # old pricing
+    eng.run_until_done()
+    # old shed test needed 14 ticks -> clock 0 + 14 > deadline 6: shed a
+    # request the wave serves by tick 4 with slack to spare
+    assert not eng.dead_letter
+    assert sorted(r.uid for r in eng.finished) == [0, 1]
+    for r in eng.finished:  # delivery never falls below the priced budget
+        assert len(r.generated) >= min(r.priced_tokens, r.max_new_tokens)
+    stats = eng.qos_stats()
+    assert stats["short_changed"] == 0
+    assert short_r.slack is not None and short_r.slack >= 0.0
+
+
+def test_token_cap_tight_at_full_bucket():
+    """The cap's floor is exact: a request whose bucket equals max_seq
+    gets precisely its one guaranteed (prefill) token, and a half-bucket
+    request keeps the remaining headroom."""
+    eng = _engine(slots=1, max_seq=16)
+    full = Request(uid=0, prompt=np.arange(1, 16, dtype=np.int32),
+                   max_new_tokens=1)                     # bucket 16
+    half = Request(uid=1, prompt=np.array([1, 2, 3], np.int32),
+                   max_new_tokens=5)                     # bucket 8
+    for r in (full, half):
+        eng.submit(r)
+    assert full.priced_tokens == 1
+    assert half.priced_tokens == 5                       # cap 9 >= 5
+    eng.run_until_done()
+    assert len(full.generated) == 1
+    assert len(half.generated) == 5
+    assert eng.qos_stats()["short_changed"] == 0
+
+
 def test_default_deadline_derived_from_token_budget():
     """submit() stamps a Table-5-style per-token budget when no explicit
     deadline is given (tasks.token_deadline_budget)."""

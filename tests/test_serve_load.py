@@ -1,0 +1,268 @@
+"""Serving under open-loop load (ISSUE 10): load-generator contracts,
+serving-config validation, the bounded compiled-closure cache, measured
+service times, and sharded-wave parity.
+
+Queueing-level tests ride the ``stub`` executor; the parity and
+state-reinit checks use the real scan executor (single device here — the
+CI benchmark gate re-runs parity on a forced 2-device host).
+"""
+import numpy as np
+import pytest
+
+from repro.core.flexai import FlexAIAgent, FlexAIConfig
+from repro.core.hmai import HMAIPlatform
+from repro.core.tasks import TaskArrays
+from repro.serve.loadgen import (LoadGenConfig, SERVE_FAMILIES,
+                                 arrival_times, generate, submit_trace)
+from repro.serve.qos import (QoSConfig, QoSPlacementEngine,
+                             power_of_two_bucket)
+
+RS = 0.05
+_PLATFORM = HMAIPlatform(capacity_scale=RS)
+_AGENT = FlexAIAgent(_PLATFORM, FlexAIConfig(seed=3))
+
+
+def _route(n: int, seed: int = 0) -> TaskArrays:
+    rng = np.random.default_rng(seed)
+    return TaskArrays(
+        kind=rng.integers(0, 3, n).astype(np.int32),
+        arrival=np.sort(rng.uniform(0, 0.01 * n, n)).astype(np.float32),
+        safety=np.full(n, 0.05, np.float32),
+        group=np.zeros(n, np.int32),
+        valid=np.ones(n, bool))
+
+
+def _engine(cfg: QoSConfig, executor="stub", mesh=None):
+    return QoSPlacementEngine(_PLATFORM, _AGENT.learner.eval_p, cfg,
+                              backlog_scale=_AGENT.cfg.backlog_scale,
+                              executor=executor, mesh=mesh)
+
+
+def _gaps(times: np.ndarray) -> np.ndarray:
+    return np.diff(np.concatenate([[0.0], times]))
+
+
+# ---------------------------------------------------------------------------
+# bucket / config validation (the serving-correctness bugfix sweep)
+# ---------------------------------------------------------------------------
+
+def test_power_of_two_bucket_rejects_nonpositive_minimum():
+    """minimum < 1 used to loop forever (doubling from 0 never reaches n);
+    it must be a ValueError, and sane minimums keep their contract."""
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="minimum"):
+            power_of_two_bucket(5, bad)
+    assert power_of_two_bucket(5, 16) == 16
+    assert power_of_two_bucket(16, 16) == 16
+    assert power_of_two_bucket(17, 16) == 32
+    assert power_of_two_bucket(1, 1) == 1
+    assert power_of_two_bucket(0, 1) == 1
+
+
+def test_qos_config_validates_knobs():
+    QoSConfig(chunk=8, min_bucket=16)  # sane config constructs
+    with pytest.raises(ValueError, match="min_bucket"):
+        QoSConfig(chunk=8, min_bucket=0)
+    with pytest.raises(ValueError, match="power of two"):
+        QoSConfig(chunk=8, min_bucket=24)
+    with pytest.raises(ValueError, match="chunk"):
+        QoSConfig(chunk=0, min_bucket=16)
+    with pytest.raises(ValueError, match="multiple"):
+        QoSConfig(chunk=12, min_bucket=16)
+    with pytest.raises(ValueError, match="slots"):
+        QoSConfig(slots=0)
+    with pytest.raises(ValueError, match="stages"):
+        QoSConfig(stages=0)
+    with pytest.raises(ValueError, match="policy"):
+        QoSConfig(policy="lifo")
+    with pytest.raises(ValueError, match="svc_ema"):
+        QoSConfig(svc_ema=0.0)
+    with pytest.raises(ValueError, match="svc_ema"):
+        QoSConfig(svc_ema=1.5)
+    with pytest.raises(ValueError, match="pipeline"):
+        QoSConfig(continuous=True, stages=2)
+
+
+def test_seg_fn_cache_is_lru_bounded():
+    """Churning more closure keys than the cap through the shared cache
+    must evict cold entries and keep hot ones — a long-lived serving
+    process cannot accumulate compiled closures forever."""
+    from repro.serve.qos import (_SEG_FN_CACHE, _SEG_FN_CACHE_CAP,
+                                 _seg_cache_get)
+    saved = dict(_SEG_FN_CACHE)
+    try:
+        _SEG_FN_CACHE.clear()
+        builds = []
+        for i in range(_SEG_FN_CACHE_CAP + 5):
+            _seg_cache_get(("lru-test", i),
+                           lambda i=i: builds.append(i) or i)
+            # re-touching the hot entry keeps it resident throughout
+            hot = _seg_cache_get(("lru-test", 0),
+                                 lambda: builds.append("rebuild"))
+        assert hot == 0 and "rebuild" not in builds
+        assert len(builds) == _SEG_FN_CACHE_CAP + 5  # each key built once
+        assert len(_SEG_FN_CACHE) == _SEG_FN_CACHE_CAP
+        assert ("lru-test", 0) in _SEG_FN_CACHE
+        assert ("lru-test", 1) not in _SEG_FN_CACHE  # coldest evicted
+    finally:
+        _SEG_FN_CACHE.clear()
+        _SEG_FN_CACHE.update(saved)
+
+
+def test_mesh_rejects_stub_executor_and_pipeline_waves():
+    import jax
+
+    from repro.compat import make_mesh
+    mesh = make_mesh((len(jax.devices()),), ("routes",))
+    with pytest.raises(ValueError, match="executor"):
+        _engine(QoSConfig(chunk=16, min_bucket=16), executor="stub",
+                mesh=mesh)
+    with pytest.raises(ValueError, match="single-stage"):
+        _engine(QoSConfig(chunk=16, min_bucket=16, stages=2),
+                executor=None, mesh=mesh)
+
+
+def test_durable_engine_rejects_continuous_and_measured():
+    from repro.serve.durability import DurableQoSEngine
+    for kw in (dict(continuous=True), dict(measured_svc=True)):
+        cfg = QoSConfig(policy="edf", chunk=16, min_bucket=16, **kw)
+        with pytest.raises(ValueError):
+            DurableQoSEngine(_PLATFORM, _AGENT.learner.eval_p, cfg,
+                             backlog_scale=_AGENT.cfg.backlog_scale,
+                             executor="stub")
+
+
+# ---------------------------------------------------------------------------
+# open-loop load generation
+# ---------------------------------------------------------------------------
+
+def test_loadgen_config_validation():
+    with pytest.raises(ValueError, match="process"):
+        LoadGenConfig(process="uniform")
+    with pytest.raises(ValueError, match="offered_load"):
+        LoadGenConfig(offered_load=0.0)
+    with pytest.raises(ValueError, match="burstiness"):
+        LoadGenConfig(process="gamma", burstiness=-1.0)
+    with pytest.raises(ValueError, match="n_requests"):
+        LoadGenConfig(n_requests=0)
+    with pytest.raises(ValueError, match="families"):
+        LoadGenConfig(families=("clean", "nope"))
+
+
+def test_arrival_times_deterministic_and_rate():
+    cfg = LoadGenConfig(process="poisson", n_requests=4000,
+                        offered_load=2.0, seed=7)
+    t1, t2 = arrival_times(cfg, 0.01), arrival_times(cfg, 0.01)
+    np.testing.assert_array_equal(t1, t2)
+    assert np.all(_gaps(t1) >= 0.0)
+    assert _gaps(t1).mean() == pytest.approx(0.01, rel=0.1)
+
+
+def test_gamma_arrivals_same_rate_higher_burstiness():
+    """The gamma process holds the offered rate of its poisson twin but
+    clumps arrivals: gap CV^2 tracks cfg.burstiness (poisson is 1)."""
+    n, mean_gap = 6000, 0.02
+    g_p = _gaps(arrival_times(LoadGenConfig(
+        process="poisson", n_requests=n, seed=3), mean_gap))
+    g_b = _gaps(arrival_times(LoadGenConfig(
+        process="gamma", burstiness=6.0, n_requests=n, seed=3), mean_gap))
+    assert g_b.mean() == pytest.approx(mean_gap, rel=0.15)
+    assert g_p.var() / g_p.mean() ** 2 == pytest.approx(1.0, rel=0.2)
+    assert g_b.var() / g_b.mean() ** 2 == pytest.approx(6.0, rel=0.3)
+
+
+def test_generate_trace_deterministic_families_and_load():
+    base = _route(24, 5)
+    cfg = LoadGenConfig(n_requests=12, offered_load=2.0, seed=9)
+    tr1 = generate(base, _PLATFORM.n, cfg, mean_service=0.05)
+    tr2 = generate(base, _PLATFORM.n, cfg, mean_service=0.05)
+    assert len(tr1) == 12
+    assert [r.arrival for r in tr1] == [r.arrival for r in tr2]
+    for a, b in zip(tr1, tr2):
+        np.testing.assert_array_equal(np.asarray(a.tasks.kind),
+                                      np.asarray(b.tasks.kind))
+    assert [r.arrival for r in tr1] == sorted(r.arrival for r in tr1)
+    assert set(r.family for r in tr1) <= set(SERVE_FAMILIES)
+    assert len(set(r.family for r in tr1)) > 1  # a mix, not one family
+    # offered_load 2.0 halves the mean gap relative to the service time
+    assert _gaps(np.asarray([r.arrival for r in tr1])).mean() < 0.05
+
+
+def test_submit_trace_serves_end_to_end():
+    base = _route(24, 5)
+    trace = generate(base, _PLATFORM.n,
+                     LoadGenConfig(n_requests=8, offered_load=1.0, seed=2),
+                     mean_service=0.05)
+    eng = _engine(QoSConfig(policy="edf", slots=2, chunk=16, min_bucket=16,
+                            continuous=True))
+    reqs = submit_trace(eng, trace)
+    assert [r.arrival for r in reqs] == [t.arrival for t in trace]
+    eng.run_until_done()
+    s = eng.stats()
+    assert s["completed"] + s["shed"] == 8
+    assert s["queued"] == 0 and s["in_flight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# measured service times
+# ---------------------------------------------------------------------------
+
+def test_measured_service_ema_calibrates_with_virtual_fallback():
+    cfg = QoSConfig(policy="edf", slots=2, chunk=16, min_bucket=16,
+                    preempt=False, shed=False, measured_svc=True)
+    eng = _engine(cfg)
+    assert eng._service_need(16) == 16 * eng.svc  # uncalibrated fallback
+    eng.submit(_route(10, 0), arrival=0.0, deadline=1e9)
+    eng.run_until_done()
+    key = (16, cfg.stages)
+    assert key in eng._svc_measured and eng._svc_measured[key] > 0.0
+    assert eng._service_need(16) == pytest.approx(
+        16 * eng._svc_measured[key])
+    assert eng._service_need(64) == 64 * eng.svc  # unseen bucket: virtual
+    assert eng.now > 0.0  # the clock advanced by measured wall time
+
+
+def test_measured_service_ema_update_rule():
+    eng = _engine(QoSConfig(policy="edf", chunk=16, min_bucket=16,
+                            measured_svc=True))  # svc_ema = 0.25
+    eng._observe_service(16, 1.6)   # per-slot 0.1 seeds the EMA
+    assert eng._svc_measured[(16, 1)] == pytest.approx(0.1)
+    eng._observe_service(16, 3.2)   # 0.75 * 0.1 + 0.25 * 0.2
+    assert eng._svc_measured[(16, 1)] == pytest.approx(0.125)
+
+
+def test_virtual_clock_unchanged_without_measured_svc():
+    """The deterministic default: clock charges the virtual constant and
+    no EMA is collected (what the parity digests and CI gates rely on)."""
+    eng = _engine(QoSConfig(policy="edf", slots=1, chunk=16, min_bucket=16,
+                            preempt=False, shed=False))
+    eng.submit(_route(10, 0), arrival=0.0, deadline=1e9)
+    eng.run_until_done()
+    assert eng._svc_measured == {}
+    assert eng.now == pytest.approx(16 * eng.svc)
+
+
+# ---------------------------------------------------------------------------
+# sharded-wave parity (single host; CI re-runs on 2 forced devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("continuous", [False, True])
+def test_sharded_wave_parity(continuous):
+    import jax
+
+    from repro.compat import make_mesh
+    from repro.serve.durability import digests_equal, serving_digest
+    mesh = make_mesh((len(jax.devices()),), ("routes",))
+
+    def serve(mesh_arg):
+        eng = _engine(QoSConfig(policy="edf", slots=3, chunk=8,
+                                min_bucket=16, continuous=continuous),
+                      executor=None, mesh=mesh_arg)
+        for i in range(5):
+            eng.submit(_route(10 + i, i), arrival=0.002 * i,
+                       deadline=100.0)
+        eng.run_until_done()
+        assert eng.stats()["completed"] == 5
+        return serving_digest(eng)
+
+    assert digests_equal(serve(None), serve(mesh))

@@ -132,6 +132,26 @@ def check_crash_replay_conservation(policy, slots, kill_after, jobs, seed):
     assert s["completed"] + s["shed"] == len(jobs)
 
 
+def check_continuous_conservation(slots, preempt, shed, jobs, seed):
+    """Continuous batching keeps the conservation contract: lane refill
+    and mid-flight overrun shedding still resolve every submitted uid
+    exactly once, with nothing left queued or in flight."""
+    eng = _engine(QoSConfig(policy="edf", slots=slots, preempt=preempt,
+                            shed=shed, chunk=16, min_bucket=16,
+                            continuous=True))
+    for i, (n, arr, budget) in enumerate(jobs):
+        eng.submit(_route(n, seed + i), arrival=arr, deadline=arr + budget)
+    eng.run_until_done()
+    assert not eng.backlog and not eng.pending and not eng.preempted
+    done = [r.uid for r in eng.completed]
+    shed_uids = [d["uid"] for d in eng.dead_letter]
+    assert sorted(done + shed_uids) == list(range(len(jobs)))
+    assert all(r.status == COMPLETED for r in eng.completed)
+    s = eng.stats()
+    assert s["completed"] + s["shed"] == len(jobs)
+    assert s["in_flight"] == 0 and s["queued"] == 0
+
+
 ADVERSARIAL_KINDS = ("bursty", "duplicate", "inverted")
 
 
@@ -330,6 +350,12 @@ if HAVE_HYPOTHESIS:
                                         seed)
 
     @SETTINGS
+    @given(slots=st.integers(1, 3), preempt=st.booleans(),
+           shed=st.booleans(), jobs=_JOBS, seed=st.integers(0, 999))
+    def test_continuous_conservation(slots, preempt, shed, jobs, seed):
+        check_continuous_conservation(slots, preempt, shed, jobs, seed)
+
+    @SETTINGS
     @given(kind=st.sampled_from(ADVERSARIAL_KINDS),
            policy=st.sampled_from(["edf", "fifo"]),
            slots=st.integers(1, 3), n_jobs=st.integers(2, 12),
@@ -405,6 +431,20 @@ def test_crash_replay_conservation_seeded(seed):
 @pytest.mark.skipif(HAVE_HYPOTHESIS,
                     reason="hypothesis drives this property instead")
 @pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+def test_continuous_conservation_seeded(seed):
+    rng = np.random.default_rng(7000 + seed)
+    jobs = [(int(rng.integers(1, 41)), float(rng.uniform(0, 0.5)),
+             float(rng.uniform(0.005, 0.6)))
+            for _ in range(int(rng.integers(1, 13)))]
+    check_continuous_conservation(slots=int(rng.integers(1, 4)),
+                                  preempt=bool(seed % 3),
+                                  shed=bool((seed // 2) % 2),
+                                  jobs=jobs, seed=seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives this property instead")
+@pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
 def test_adversarial_conservation_seeded(seed):
     rng = np.random.default_rng(5000 + seed)
     check_adversarial_conservation(
@@ -447,6 +487,93 @@ def test_preemption_actually_fires():
 # ---------------------------------------------------------------------------
 # deterministic spot-checks
 # ---------------------------------------------------------------------------
+
+def test_stats_mid_drain_honest(fixed_seed):
+    """Mid-drain ``stats()`` must not deflate the miss rate with work that
+    has no verdict yet (ISSUE 10 bugfix): the denominator is *resolved*
+    requests only, and queued / in-flight counts are reported separately.
+    The old submitted-denominated rate read 1/4 here."""
+    eng = _engine(QoSConfig(policy="edf", slots=1, chunk=16, min_bucket=16,
+                            preempt=False, shed=False))
+    tight = eng.submit(_route(16, fixed_seed), arrival=0.0,
+                       deadline=0.5 * 16 * eng.svc)  # will finish late
+    for i in range(3):
+        eng.submit(_route(16, fixed_seed + 1 + i), arrival=0.0,
+                   deadline=100.0)
+    eng._run_wave(eng._next_wave())  # serve only the tight head
+    assert tight.status == COMPLETED and tight.slack < 0.0
+    s = eng.stats()
+    assert s["submitted"] == 4
+    assert s["resolved"] == 1 and s["completed"] == 1
+    assert s["queued"] == 3 and s["in_flight"] == 0
+    assert s["miss_rate"] == 1.0          # 1 resolved, 1 missed
+    eng.run_until_done()
+    done = eng.stats()
+    assert done["resolved"] == 4 and done["queued"] == 0
+    assert done["miss_rate"] == pytest.approx(1 / 4)
+
+
+def test_stats_counts_in_flight_lanes(fixed_seed):
+    """A halted continuous wave's occupants are ``in_flight`` — neither
+    resolved nor queued."""
+    eng = _engine(QoSConfig(policy="edf", slots=2, chunk=16, min_bucket=16,
+                            preempt=False, shed=False, continuous=True))
+    eng.submit(_route(60, fixed_seed), arrival=0.0, deadline=100.0)
+    eng.submit(_route(60, fixed_seed + 1), arrival=0.0, deadline=100.0)
+    eng.submit(_route(60, fixed_seed + 2), arrival=0.0, deadline=100.0)
+    wave = eng._next_wave()
+    orig = eng._after_segment
+    eng._after_segment = lambda w: setattr(eng, "_halt", True)
+    eng._run_wave(wave)  # one segment, then the durability-style halt
+    eng._after_segment = orig
+    s = eng.stats()
+    assert s["in_flight"] == 2 and s["queued"] == 1
+    assert s["resolved"] == 0 and s["miss_rate"] == 0.0
+
+
+def test_refilled_lane_state_is_reinitialized(fixed_seed):
+    """Continuous batching must not leak platform state across lane
+    occupants: a request admitted by refill produces placements
+    bit-identical to serving it alone on a fresh engine."""
+    cfg = QoSConfig(policy="edf", slots=1, chunk=8, min_bucket=16,
+                    preempt=False, shed=False, continuous=True)
+    eng = _engine(cfg, executor=None)  # real scan executor
+    a = eng.submit(_route(16, fixed_seed), arrival=0.0, deadline=100.0)
+    b = eng.submit(_route(16, fixed_seed + 1), arrival=0.0, deadline=100.0)
+    eng.run_until_done()
+    assert a.status == COMPLETED and b.status == COMPLETED
+    assert eng.stats()["refills"] >= 1  # b rode a's wave via refill
+    for req, seed in ((a, fixed_seed), (b, fixed_seed + 1)):
+        solo = _engine(cfg, executor=None)
+        ref = solo.submit(_route(16, seed), arrival=0.0, deadline=100.0)
+        solo.run_until_done()
+        np.testing.assert_array_equal(req.summary["placements"],
+                                      ref.summary["placements"])
+        assert req.summary["stm_rate"] == ref.summary["stm_rate"]
+
+
+def test_continuous_starvation_bound_survives_refill(fixed_seed):
+    """Refill admission must not bypass aging: a long-bucket request
+    facing an endless short-bucket stream served through one continuously
+    refilled wave is still admitted within the ``spread/credit + O(1)``
+    bound (every refill round that admits anyone ages the backlog)."""
+    credit, long_deadline, tight = 0.02, 0.3, 0.01
+    k = math.ceil((long_deadline - tight) / credit) + 3
+    n_stream = k + 10  # stream strictly outlasts the bound
+    eng = _engine(QoSConfig(policy="edf", aging_credit=credit, slots=1,
+                            preempt=False, shed=False, chunk=16,
+                            min_bucket=16, continuous=True))
+    long_r = eng.submit(_route(60, fixed_seed), arrival=0.0,
+                        deadline=long_deadline)
+    gap = 0.9 * 16 * eng.svc  # arrivals slightly outpace short service
+    for i in range(n_stream):
+        eng.submit(_route(12, fixed_seed + 1 + i), arrival=i * gap,
+                   deadline=tight)
+    eng.run_until_done()
+    assert eng.stats()["refills"] >= 1  # the stream rode refilled lanes
+    assert long_r.status == COMPLETED
+    assert long_r.waves_waited <= k, (long_r.waves_waited, k)
+
 
 def test_wave_inherits_aging_credit(fixed_seed):
     """A passed-over request keeps its earned aging credit when finally
